@@ -1,0 +1,41 @@
+"""Paper Fig 2(a): append bandwidth as the blob grows.
+
+A single client appends fixed-size chunks until the blob reaches the
+target size, for page sizes 64 KB / 256 KB and 50 / 175 co-deployed
+data+metadata providers (the paper's two deployments, scaled in total
+bytes for a 1-core container).  Derived bandwidth = chunk bytes over the
+growth of the client endpoint's simulated busy time — the metric the
+paper plots; expect near-flat curves with dips when the page count
+crosses a power of two (one more metadata-tree level per append).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Reporter, timer
+from repro.core import BlobSeerService
+
+
+def run(rep: Reporter, *, total_mb: int = 32, chunk_mb: int = 2) -> None:
+    for n_providers in (50, 175):
+        for psize_kb in (64, 256):
+            svc = BlobSeerService(n_providers=n_providers,
+                                  n_meta_shards=n_providers)
+            client = svc.client("appender")
+            bid = client.create(psize=psize_kb * 1024)
+            chunk = b"\xab" * (chunk_mb * 1024 * 1024)
+            sim_bw = []
+            t0 = timer()
+            for i in range(total_mb // chunk_mb):
+                before = svc.wire.stats(client.name).sim_busy_until
+                client.append(bid, chunk)
+                after = svc.wire.stats(client.name).sim_busy_until
+                sim_bw.append(len(chunk) / max(after - before, 1e-9) / 1e6)
+            wall = timer() - t0
+            n_appends = total_mb // chunk_mb
+            rep.add(
+                f"append_p{n_providers}_ps{psize_kb}k",
+                wall / n_appends * 1e6,
+                f"sim_bw_first={sim_bw[0]:.1f}MBps sim_bw_last={sim_bw[-1]:.1f}MBps "
+                f"sim_bw_min={min(sim_bw):.1f}MBps blob={total_mb}MB "
+                f"meta_nodes={svc.dht.total_keys()}",
+            )

@@ -1,0 +1,56 @@
+"""Kernel-path throughput on the CPU oracle path (jit'd ref).
+
+Real TPU numbers come from the roofline analysis; here we verify the
+digest/delta pipeline sustains enough host-side throughput to never gate
+checkpointing, and time the blockwise attention path the 32k cells use.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Reporter, timer
+from repro.kernels import ops
+
+
+def _bench(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = timer()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (timer() - t0) / iters
+
+
+def run(rep: Reporter) -> None:
+    rng = np.random.default_rng(0)
+
+    x = jnp.asarray(rng.standard_normal(8 * 1024 * 1024 // 4), jnp.float32)  # 8MB
+    dt = _bench(lambda a: ops.page_digest(a, page_bytes=64 * 1024), x)
+    rep.add("page_digest_8MB", dt * 1e6, f"bw={8 / dt:.0f}MBps")
+
+    d1 = ops.page_digest(x, page_bytes=64 * 1024)
+    d2 = d1.at[3, 0].add(1)
+    dt = _bench(ops.delta_mask, d1, d2)
+    rep.add("delta_mask_128pages", dt * 1e6, f"pages_per_s={128/dt:.0f}")
+
+    q = jnp.asarray(rng.standard_normal((1, 8, 1024, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 2, 8192, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 2, 8192, 64)), jnp.bfloat16)
+    from repro.models.layers import attention_core
+    attn = jax.jit(lambda q, k, v: attention_core(
+        q, k, v, causal=True, window=None, q_offset=7168, softcap=None))
+    dt = _bench(attn, q, k, v)
+    flops = 4 * 1 * 8 * 1024 * 8192 * 64 / 2
+    rep.add("blockwise_attn_1k_q_8k_kv", dt * 1e6,
+            f"gflops={flops/dt/1e9:.1f}")
+
+    a = jnp.asarray(rng.uniform(0.9, 0.999, (4, 2048, 256)), jnp.float32)
+    xs = jnp.asarray(rng.standard_normal((4, 2048, 256)), jnp.float32)
+    dt = _bench(ops.linear_scan, a, xs)
+    rep.add("linear_scan_4x2048x256", dt * 1e6,
+            f"elems_per_s={a.size/dt/1e6:.0f}M")

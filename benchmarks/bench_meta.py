@@ -1,0 +1,65 @@
+"""Metadata-scheme microbenchmarks (paper §4 analysis).
+
+* nodes created per update as the blob grows (O(log N) sharing),
+* READ_META node fetches for random ranges at several blob depths,
+* version-manager assignment throughput (the only serialization point —
+  the paper argues it is negligible; measure it).
+"""
+
+from __future__ import annotations
+
+import random
+
+from benchmarks.common import Reporter, timer
+from repro.core import BlobSeerService
+from repro.core import segment_tree as st
+
+
+def run(rep: Reporter) -> None:
+    svc = BlobSeerService(n_providers=16, n_meta_shards=16)
+    c = svc.client()
+    psize = 1024
+    bid = c.create(psize=psize)
+
+    # --- nodes created per one-page overwrite at growing blob sizes ---
+    for pages_exp in (6, 10, 14):
+        pages = 1 << pages_exp
+        size = c.get_size(bid, c.get_recent(bid))
+        grow = pages * psize - size
+        if grow > 0:
+            c.append(bid, b"g" * grow)
+        before = svc.dht.total_keys()
+        c.write(bid, b"o" * psize, (pages // 2) * psize)
+        created = svc.dht.total_keys() - before
+        rep.add(f"meta_nodes_per_write_2e{pages_exp}p", 0.0,
+                f"created={created} expected={pages_exp + 1} (log2 N + 1)")
+
+    # --- READ_META fetches for random 64-page ranges ---
+    v = c.get_recent(bid)
+    root_pages = svc.vm.root_pages_published(bid, v)
+    rnd = random.Random(0)
+    owner = c._owner_fn(bid)
+    n_iter = 200
+    t0 = timer()
+    fetched = 0
+    for _ in range(n_iter):
+        p0 = rnd.randrange(0, root_pages - 64)
+        pd = st.read_meta(svc.dht, owner, v, root_pages, p0, p0 + 64)
+        fetched += len(pd)
+    wall = timer() - t0
+    rep.add("read_meta_64page_range", wall / n_iter * 1e6,
+            f"leaves_per_query={fetched / n_iter:.1f} root_pages={root_pages}")
+
+    # --- version-manager assignment throughput (serialization point) ---
+    n = 2000
+    bid2 = c.create(psize=64)
+    c.append(bid2, b"x" * 64)
+    t0 = timer()
+    for i in range(n):
+        info = svc.vm.assign_version(bid2, None, 64, client="bench",
+                                     pd=(("pid", 0, ("prov-0000",), 64),))
+        svc.vm.register_pd(bid2, info.version, (("pid", 0, ("prov-0000",), 64),))
+        svc.vm.metadata_complete(bid2, info.version)
+    wall = timer() - t0
+    rep.add("version_manager_assign_publish", wall / n * 1e6,
+            f"ops_per_s={n / wall:.0f}")

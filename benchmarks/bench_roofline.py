@@ -1,0 +1,34 @@
+"""Roofline summary: aggregates the dry-run artifacts into the §Roofline
+table (single-pod).  Requires ``experiments/dryrun/*.json`` (produced by
+``python -m repro.launch.dryrun``); emits one row per (arch x shape).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Reporter
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def run(rep: Reporter) -> None:
+    paths = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*_single_*.json")))
+    if not paths:
+        rep.add("roofline", 0.0, "no dryrun artifacts; run repro.launch.dryrun first")
+        return
+    for p in paths:
+        rec = json.load(open(p))
+        if rec.get("status") != "ok":
+            continue
+        r = rec["roofline"]
+        rep.add(
+            f"roofline_{rec['arch']}_{rec['shape']}",
+            r["step_time_s"] * 1e6,
+            f"bottleneck={r['bottleneck']} compute_ms={r['compute_s']*1e3:.2f} "
+            f"memory_ms={r['memory_s']*1e3:.2f} "
+            f"collective_ms={r['collective_s']*1e3:.2f} "
+            f"mfu_bound={r['mfu_bound'] if r['mfu_bound'] is None else round(r['mfu_bound'], 3)}",
+        )

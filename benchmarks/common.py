@@ -1,0 +1,43 @@
+"""Shared benchmark plumbing.
+
+Wall-clock on this 1-core container measures Python control-plane speed;
+the paper's *bandwidth* figures are reproduced on the simulated wire
+(Grid'5000 constants measured in the paper: 117.5 MB/s TCP, 0.1 ms
+latency) — every remote byte/request is accounted per endpoint, so
+simulated makespans capture client-NIC serialization and provider
+contention exactly like the testbed did.
+
+Row contract (benchmarks/run.py): ``name,us_per_call,derived``.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+from dataclasses import dataclass
+from typing import List, Optional
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def emit(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+class Reporter:
+    def __init__(self) -> None:
+        self.rows: List[Row] = []
+
+    def add(self, name: str, us_per_call: float, derived: str) -> None:
+        row = Row(name, us_per_call, derived)
+        self.rows.append(row)
+        print(row.emit())
+        sys.stdout.flush()
+
+
+def timer():
+    return time.perf_counter()

@@ -1,0 +1,43 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run append read # subset
+
+Emits ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import sys
+
+from benchmarks.common import Reporter
+
+BENCHES = ["append", "read", "meta", "space", "ckpt", "kernels", "roofline"]
+
+
+def main() -> None:
+    which = sys.argv[1:] or BENCHES
+    rep = Reporter()
+    print("name,us_per_call,derived")
+    for name in which:
+        if name == "append":
+            from benchmarks import bench_append as m
+        elif name == "read":
+            from benchmarks import bench_read as m
+        elif name == "meta":
+            from benchmarks import bench_meta as m
+        elif name == "space":
+            from benchmarks import bench_space as m
+        elif name == "ckpt":
+            from benchmarks import bench_ckpt as m
+        elif name == "kernels":
+            from benchmarks import bench_kernels as m
+        elif name == "roofline":
+            from benchmarks import bench_roofline as m
+        else:
+            raise SystemExit(f"unknown bench {name!r}; known: {BENCHES}")
+        m.run(rep)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""BlobSeer-backed checkpointing."""
+
+from repro.checkpoint.blobckpt import BlobCheckpointer, CheckpointStats
+
+__all__ = ["BlobCheckpointer", "CheckpointStats"]

@@ -1,0 +1,287 @@
+"""Versioned, incremental, branchable checkpoints over BlobSeer.
+
+This is the paper's technique deployed as the framework's fault-
+tolerance substrate:
+
+* the training state pytree is laid out in one blob, every leaf aligned
+  to page boundaries;
+* each save WRITEs only the *changed page ranges* (detected with the
+  ``page_digest``/``delta_mask`` kernels), so unchanged pages — frozen
+  embeddings, cold optimizer slots, the entire model when only the data
+  cursor moved — are physically shared between checkpoints via the
+  segment tree's copy-on-write weaving (paper §4.3 "efficient use of
+  storage space");
+* commit protocol: data pages -> manifest (layout + step + digests +
+  pipeline cursor) -> a one-page *commit pointer* holding the manifest
+  write's snapshot version.  A restore resolves the pointer and reads
+  manifest + leaves **at that version** — BlobSeer snapshots are
+  immutable, so a reader can GET_RECENT at any moment (mid-save
+  included) and always reconstruct a fully consistent checkpoint, while
+  later saves proceed concurrently on higher versions;
+* BRANCH forks a checkpoint lineage in O(1) bytes for ablations /
+  fine-tunes (examples/branch_experiments.py).
+
+Everything below is plain numpy/bytes on the host side: device arrays
+are pulled with ``jax.device_get`` leaf-by-leaf (a real multi-host
+deployment would hand each host its own leaf shards; the interface is
+per-leaf so that change is local).
+"""
+
+from __future__ import annotations
+
+import json
+import zlib
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blob import BlobClient
+from repro.kernels import ops as kops
+
+
+@dataclass
+class CheckpointStats:
+    version: int
+    step: int
+    total_bytes: int
+    written_bytes: int
+    pages_total: int
+    pages_written: int
+
+    @property
+    def sharing_fraction(self) -> float:
+        return 1.0 - (self.pages_written / max(self.pages_total, 1))
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        out.append((key, leaf))
+    out.sort(key=lambda kv: kv[0])
+    return out
+
+
+class BlobCheckpointer:
+    def __init__(
+        self,
+        client: BlobClient,
+        blob_id: Optional[str] = None,
+        *,
+        psize: int = 256 * 1024,
+        header_pages: int = 64,
+    ) -> None:
+        self.client = client
+        if blob_id is None:
+            blob_id = client.create(psize=psize)
+        self.blob_id = blob_id
+        self.psize = client.vm.psize_of(blob_id)
+        self.header_bytes = header_pages * self.psize
+        # header layout: [commit pointer page][manifest region]
+        self.manifest_off = self.psize
+        self._digests: Dict[str, np.ndarray] = {}   # path -> (n_pages, 2) u32
+        self._layout: Dict[str, Tuple[int, int]] = {}  # path -> (offset, nbytes)
+
+    # ------------------------------------------------------------------- save
+    def save(self, state, step: int, extra: Optional[Dict] = None) -> CheckpointStats:
+        """Write an incremental checkpoint; returns sharing stats."""
+        leaves = _flatten_with_paths(state)
+        psz = self.psize
+
+        # -- layout: leaf offsets page-aligned after the header region --
+        offset = self.header_bytes
+        layout: Dict[str, Tuple[int, int]] = {}
+        arrays: Dict[str, np.ndarray] = {}
+        for path, leaf in leaves:
+            arr = np.asarray(jax.device_get(leaf))
+            arrays[path] = arr
+            nbytes = max(arr.nbytes, 1)
+            layout[path] = (offset, nbytes)
+            offset += -(-nbytes // psz) * psz
+        total = offset
+        layout_changed = layout != self._layout
+
+        # BlobSeer WRITE forbids holes (offset <= size of the previous
+        # snapshot): on first save, commit a zero header so subsequent
+        # page-aligned leaf writes extend the blob contiguously.
+        recent = self.client.get_recent(self.blob_id)
+        cur_size = self.client.get_size(self.blob_id, recent) if recent else 0
+        if cur_size < self.header_bytes:
+            self.client.write(self.blob_id, b"\0" * self.header_bytes, 0)
+
+        written_bytes = 0
+        pages_written = 0
+        pages_total = (total - self.header_bytes) // psz
+        manifest_leaves = []
+        new_digests: Dict[str, np.ndarray] = {}
+        for path, leaf in leaves:
+            arr = arrays[path]
+            off, nbytes = layout[path]
+            raw = arr.tobytes()
+            padded = raw + b"\0" * ((-len(raw)) % 4)
+            dg = np.asarray(kops.page_digest(
+                jnp.asarray(np.frombuffer(padded, dtype=np.uint8)), page_bytes=psz,
+            ))
+            new_digests[path] = dg
+            old = self._digests.get(path)
+            if layout_changed or old is None or old.shape != dg.shape:
+                dirty = np.ones(dg.shape[0], dtype=bool)
+            else:
+                dirty = np.asarray(kops.delta_mask(
+                    jax.numpy.asarray(dg), jax.numpy.asarray(old)
+                ))
+            # write contiguous dirty page runs, zero-padded to full pages:
+            # page-aligned writes are BlobSeer's fast path (no boundary
+            # merging) and keep blob growth contiguous
+            n_pages = dg.shape[0]
+            i = 0
+            while i < n_pages:
+                if not dirty[i]:
+                    i += 1
+                    continue
+                j = i
+                while j < n_pages and dirty[j]:
+                    j += 1
+                lo = i * psz
+                chunk = raw[lo : j * psz]
+                pad = (j - i) * psz - len(chunk)
+                if pad:
+                    chunk = chunk + b"\0" * pad
+                self.client.write(self.blob_id, chunk, off + lo)
+                written_bytes += len(chunk)
+                pages_written += j - i
+                i = j
+            manifest_leaves.append({
+                "path": path,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "offset": off,
+                "nbytes": nbytes,
+            })
+
+        manifest = {
+            "format": 1,
+            "step": step,
+            "total_bytes": total,
+            "leaves": manifest_leaves,
+            "extra": extra or {},
+            "digests": {p: d.tobytes().hex() for p, d in new_digests.items()},
+        }
+        payload = zlib.compress(json.dumps(manifest).encode())
+        record = len(payload).to_bytes(8, "little") + payload
+        if len(record) > self.header_bytes - self.manifest_off:
+            raise ValueError(
+                f"manifest ({len(record)}B) exceeds header region "
+                f"({self.header_bytes - self.manifest_off}B); raise header_pages"
+            )
+        # commit protocol: manifest, then the commit pointer naming the
+        # manifest write's snapshot version (restores read AT that version)
+        vm_version = self.client.write(self.blob_id, record, self.manifest_off)
+        commit = vm_version.to_bytes(8, "little") + b"\1"
+        vc = self.client.write(self.blob_id, commit, 0)
+        self.client.sync(self.blob_id, vc)
+        self._digests = new_digests
+        self._layout = layout
+        written_bytes += len(record) + len(commit)
+        return CheckpointStats(
+            version=vc, step=step, total_bytes=total,
+            written_bytes=written_bytes, pages_total=pages_total,
+            pages_written=pages_written,
+        )
+
+    # ---------------------------------------------------------------- restore
+    def read_manifest(self, version: Optional[int] = None) -> Tuple[Dict, int]:
+        """(manifest, resolved_version). Leaf reads must use the latter.
+
+        ``version`` may be any snapshot (default: most recent published);
+        the commit pointer stored at that snapshot names the manifest
+        write's version, and manifest + leaves are read there — immutable
+        snapshots make this consistent no matter what later saves did.
+        """
+        at = version if version is not None else self.client.get_recent(self.blob_id)
+        if at == 0:
+            raise FileNotFoundError("no checkpoint published yet")
+        head = self.client.read(self.blob_id, at, 0, 9)
+        if head[8] != 1:
+            raise FileNotFoundError("no checkpoint committed yet")
+        vm = int.from_bytes(head[:8], "little")
+        head = self.client.read(self.blob_id, vm, self.manifest_off, 8)
+        n = int.from_bytes(head, "little")
+        raw = self.client.read(self.blob_id, vm, self.manifest_off + 8, n)
+        manifest = json.loads(zlib.decompress(raw))
+        return manifest, vm
+
+    def restore(self, like, version: Optional[int] = None,
+                with_manifest: bool = False):
+        """Rebuild a state pytree shaped ``like`` from a checkpoint.
+
+        ``like`` may contain arrays or ShapeDtypeStructs; restored leaves
+        are plain numpy (callers ``device_put`` with their shardings).
+        """
+        manifest, version = self.read_manifest(version)
+        by_path = {l["path"]: l for l in manifest["leaves"]}
+        flat = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path, leaf in flat[0]:
+            key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                           for p in path)
+            rec = by_path.get(key)
+            if rec is None:
+                raise KeyError(f"checkpoint v{version} missing leaf {key}")
+            raw = self.client.read(self.blob_id, version, rec["offset"], rec["nbytes"])
+            arr = np.frombuffer(raw, dtype=np.dtype(rec["dtype"])).reshape(rec["shape"])
+            leaves.append(arr)
+        tree = jax.tree_util.tree_unflatten(flat[1], leaves)
+        if with_manifest:
+            return tree, manifest
+        return tree
+
+    def load_digest_cache(self, version: Optional[int] = None) -> None:
+        """Resume delta-detection after a trainer restart."""
+        manifest, _ = self.read_manifest(version)
+        self._digests = {
+            p: np.frombuffer(bytes.fromhex(h), dtype=np.uint32).reshape(-1, 2)
+            for p, h in manifest.get("digests", {}).items()
+        }
+        self._layout = {
+            l["path"]: (l["offset"], l["nbytes"]) for l in manifest["leaves"]
+        }
+
+    # ----------------------------------------------------------------- branch
+    def branch(self, version: Optional[int] = None) -> "BlobCheckpointer":
+        """Fork the lineage at a commit version (default: most recent)."""
+        if version is None:
+            version = self.client.get_recent(self.blob_id)
+        bid = self.client.branch(self.blob_id, version)
+        child = BlobCheckpointer(self.client, bid,
+                                 header_pages=self.header_bytes // self.psize)
+        child.load_digest_cache(version)
+        return child
+
+    def steps(self) -> List[Tuple[int, int]]:
+        """(version, step) of every complete checkpoint in the lineage."""
+        out = []
+        recent = self.client.get_recent(self.blob_id)
+        seen = set()
+        v = recent
+        while v > 0:
+            try:
+                manifest, _ = self.read_manifest(v)
+            except Exception:
+                break
+            key = manifest["step"]
+            if key not in seen:
+                out.append((v, key))
+                seen.add(key)
+            # jump to before this checkpoint's writes: heuristic walk
+            v -= 1
+            if len(out) > 10_000:
+                break
+        return sorted(out)

@@ -1,0 +1,33 @@
+"""BlobSeer core: the paper's contribution.
+
+Versioned, page-striped blob storage with distributed segment-tree
+metadata over a DHT, total-order snapshot publication, and cheap
+branching — per Nicolae, Antoniu & Bougé (DAMAP 2009).
+"""
+
+from repro.core.blob import BlobClient, ReadError
+from repro.core.service import BlobSeerService
+from repro.core.transport import Wire, EndpointDown
+from repro.core.version_manager import (
+    VersionManager,
+    VersionUnpublished,
+    WriteBeyondEnd,
+)
+
+__all__ = [
+    "BlobClient",
+    "BlobSeerService",
+    "EndpointDown",
+    "ReadError",
+    "VersionManager",
+    "VersionUnpublished",
+    "Wire",
+    "WriteBeyondEnd",
+]
+
+
+def collect_garbage(svc, keep):
+    """Snapshot-retirement GC (see repro.core.gc)."""
+    from repro.core.gc import collect_garbage as _gc
+
+    return _gc(svc, keep)

@@ -1,0 +1,389 @@
+"""Blob client: the paper's user-facing primitives.
+
+CREATE / READ (Alg 1) / WRITE (Alg 2) / APPEND / GET_RECENT / GET_SIZE /
+SYNC / BRANCH, against a deployment of {version manager, metadata DHT,
+provider manager}.
+
+Concurrency properties (paper §4.3) preserved:
+
+* data pages are written with **no synchronization** between clients —
+  every update creates new pages;
+* metadata is built without locking: border nodes of concurrent
+  unpublished updates are resolved from the version-manager-supplied
+  registry info, everything else by descending a published tree;
+* the only serialization points are the version-manager critical
+  section (short) and same-endpoint contention.
+
+Unaligned ranges (the paper's "slightly more complex" §3 case) are fully
+supported: a boundary page whose range is partially overwritten becomes
+a *new* page whose content merges the previous snapshot's bytes with the
+update's bytes.  Only this case ever waits on another writer (the
+previous version's metadata must be complete to read the old content).
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import segment_tree as st
+from repro.core.dht import MetadataDHT
+from repro.core.pages import fresh_page_id, pages_spanned
+from repro.core.provider import ProviderManager
+from repro.core.transport import Wire
+from repro.core.version_manager import AssignInfo, VersionManager
+
+_client_ids = itertools.count()
+_client_ids_lock = threading.Lock()
+
+
+class ReadError(RuntimeError):
+    pass
+
+
+class _NodeCache:
+    """Client-side cache over the metadata DHT.
+
+    Tree nodes are immutable once written (the system never updates
+    metadata in place — the paper's key design choice), so caching is
+    unconditionally safe.  Sequential appends re-descend the same
+    published root for border resolution and repeated reads re-fetch the
+    top tree levels; both become local hits.  Negative lookups are never
+    cached (the node may be written later).
+    """
+
+    MAX_ENTRIES = 65536
+
+    def __init__(self, dht: MetadataDHT) -> None:
+        self._dht = dht
+        self._cache: Dict = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key, peer=None):
+        with self._lock:
+            if key in self._cache:
+                self.hits += 1
+                return self._cache[key]
+        value = self._dht.get(key, peer=peer)
+        self.misses += 1
+        if value is not None:
+            with self._lock:
+                if len(self._cache) >= self.MAX_ENTRIES:
+                    self._cache.clear()
+                self._cache[key] = value
+        return value
+
+    def put(self, key, value, peer=None):
+        self._dht.put(key, value, peer=peer)
+        with self._lock:
+            if len(self._cache) < self.MAX_ENTRIES:
+                self._cache[key] = value
+
+    def put_many(self, items, peer=None):
+        self._dht.put_many(items, peer=peer)
+        with self._lock:
+            for key, value in items:
+                if len(self._cache) >= self.MAX_ENTRIES:
+                    break
+                self._cache[key] = value
+
+
+class BlobClient:
+    """One client process (paper §3.1: 'Clients may create blobs and
+    read, write and append data to them')."""
+
+    def __init__(
+        self,
+        vm: VersionManager,
+        dht: MetadataDHT,
+        pm: ProviderManager,
+        wire: Wire,
+        name: Optional[str] = None,
+        io_workers: int = 0,
+    ) -> None:
+        self.vm = vm
+        self.dht = _NodeCache(dht)
+        self.pm = pm
+        self.wire = wire
+        if name is None:
+            with _client_ids_lock:
+                name = f"client-{next(_client_ids):04d}"
+        self.name = name
+        self._pool = ThreadPoolExecutor(max_workers=io_workers) if io_workers > 0 else None
+        self._lineage_cache: Dict[str, Tuple[Tuple[str, int], ...]] = {}
+
+    # ------------------------------------------------------------- small utils
+    def _parallel(self, fn, items: Sequence) -> List:
+        """'for all ... in parallel do' loops of Algorithms 1 and 2."""
+        if self._pool is None or len(items) <= 1:
+            return [fn(x) for x in items]
+        return list(self._pool.map(fn, items))
+
+    def _owner_fn(self, blob_id: str):
+        chain = self._lineage_cache.get(blob_id)
+        if chain is None:
+            chain = self.vm.lineage(blob_id)
+            self._lineage_cache[blob_id] = chain
+
+        def owner(version: int) -> str:
+            for bid, base in chain:
+                if version > base:
+                    return bid
+            return chain[-1][0]
+
+        return owner
+
+    # ---------------------------------------------------------------- CREATE
+    def create(self, psize: int = 64 * 1024) -> str:
+        return self.vm.create(psize, client=self.name)
+
+    # ------------------------------------------------------------------ READ
+    def read(self, blob_id: str, version: int, offset: int, size: int) -> bytes:
+        """Algorithm 1. Fails if ``version`` unpublished or range OOB."""
+        if not self.vm.is_published(blob_id, version):
+            raise ReadError(f"{blob_id} v{version} not published")
+        total = self.vm.get_size(blob_id, version, client=self.name)
+        if offset < 0 or size < 0 or offset + size > total:
+            raise ReadError(
+                f"range ({offset},{size}) out of bounds for v{version} (size {total})"
+            )
+        if size == 0:
+            return b""
+        psize = self.vm.psize_of(blob_id)
+        p0, p1 = pages_spanned(offset, size, psize)
+        pd = st.read_meta(
+            self.dht, self._owner_fn(blob_id), version,
+            self.vm.root_pages_published(blob_id, version), p0, p1, peer=self.name,
+        )
+        buf = bytearray(size)
+
+        def fetch(d: st.PageDescriptor) -> None:
+            page_start = d.page_index * psize
+            lo = max(offset, page_start)
+            hi = min(offset + size, page_start + d.length)
+            if hi <= lo:
+                return
+            chunk = self.pm.fetch_page(
+                d.providers, d.page_id, off=lo - page_start, length=hi - lo,
+                peer=self.name,
+            )
+            buf[lo - offset : hi - offset] = chunk
+
+        self._parallel(fetch, pd)
+        return bytes(buf)
+
+    # ------------------------------------------------------------- WRITE/APPEND
+    def write(self, blob_id: str, buf: bytes, offset: int) -> int:
+        """Algorithm 2 (+ unaligned boundary handling). Returns vw."""
+        return self._update(blob_id, buf, offset=offset)
+
+    def append(self, blob_id: str, buf: bytes) -> int:
+        """APPEND: offset is assigned by the version manager."""
+        return self._update(blob_id, buf, offset=None)
+
+    def _update(self, blob_id: str, buf: bytes, offset: Optional[int]) -> int:
+        if len(buf) == 0:
+            raise ValueError("empty update")
+        psize = self.vm.psize_of(blob_id)
+        size = len(buf)
+        stored: Dict[int, Tuple[str, Tuple[str, ...], int]] = {}  # rel_page -> (pid, provs, length)
+
+        # -- phase 1: store what we can BEFORE version assignment (no sync) --
+        # WRITE knows its offset: every page fully covered by the range can
+        # go out now.  APPEND optimistically assumes a page-aligned offset
+        # (always true in the paper); if assignment reveals an unaligned
+        # offset we re-stripe below.
+        presumed_offset = offset if offset is not None else 0  # append: relative
+        p0_pre, _ = pages_spanned(presumed_offset, size, psize)
+        full_lo = -(-presumed_offset // psize)                      # first fully covered page
+        full_hi = (presumed_offset + size) // psize                 # one past last fully covered
+        self._store_full_pages(
+            buf, presumed_offset, psize, range(full_lo, full_hi), p0_pre, stored
+        )
+        pd_wire = tuple(
+            (pid, rel, provs, ln) for rel, (pid, provs, ln) in sorted(stored.items())
+        )
+
+        # -- phase 2: version assignment (the only global serialization) --
+        info = self.vm.assign_version(
+            blob_id, offset, size, client=self.name, pd=pd_wire
+        )
+        vw, off = info.version, info.offset
+
+        if offset is None and off % psize != 0:
+            # Optimistic append striping assumed an aligned offset (always
+            # true in the paper's aligned world); restripe at the real one.
+            stored.clear()
+            full_lo = -(-off // psize)
+            full_hi = (off + size) // psize
+            self._store_full_pages(buf, off, psize, range(full_lo, full_hi), info.p0, stored)
+
+        # -- phase 3: boundary pages (merge with snapshot vw-1 content) --
+        stored_boundary = self._store_boundary_pages(
+            blob_id, buf, off, size, psize, info, stored
+        )
+
+        pd_final = tuple(
+            (pid, rel, provs, ln) for rel, (pid, provs, ln) in sorted(stored.items())
+        )
+        if stored_boundary or pd_final != pd_wire:
+            self.vm.register_pd(blob_id, vw, pd_final, client=self.name)
+
+        # -- phase 4: weave metadata (Algorithm 4), then publish --
+        self._build_and_complete(blob_id, info, pd_final)
+        return vw
+
+    # ------------------------------------------------------- update internals
+    def _store_full_pages(
+        self,
+        buf: bytes,
+        off: int,
+        psize: int,
+        page_range,
+        p0: int,
+        stored: Dict[int, Tuple[str, Tuple[str, ...], int]],
+    ) -> None:
+        pages = list(page_range)
+        if not pages:
+            return
+        groups = self.pm.allocate(len(pages))
+
+        def put(i_k):
+            i, k = i_k
+            payload = buf[k * psize - off : (k + 1) * psize - off]
+            pid = fresh_page_id()
+            provs = self.pm.store_page(groups[i], pid, payload, peer=self.name)
+            stored[k - p0] = (pid, tuple(provs), len(payload))
+
+        self._parallel(put, list(enumerate(pages)))
+
+    def _store_boundary_pages(
+        self,
+        blob_id: str,
+        buf: bytes,
+        off: int,
+        size: int,
+        psize: int,
+        info: AssignInfo,
+        stored: Dict[int, Tuple[str, Tuple[str, ...], int]],
+    ) -> bool:
+        """Create merged pages for partially covered boundary pages.
+
+        Returns True if any page was stored here.  Only this path ever
+        waits on the previous writer (its metadata must be complete so
+        the old content is readable) — full-page updates never block.
+        """
+        vw = info.version
+        end = off + size
+        boundary: List[int] = []
+        if off % psize != 0:
+            boundary.append(off // psize)
+        if end % psize != 0 and end // psize not in boundary:
+            boundary.append(end // psize)
+        if not boundary:
+            return False
+
+        old_size = info.prev_size
+        if any((k * psize < off and old_size > k * psize) or (end < min(old_size, (k + 1) * psize))
+               for k in boundary):
+            # merging needs snapshot vw-1 content
+            if vw - 1 > 0:
+                self.vm.wait_metadata(blob_id, vw - 1)
+
+        for k in boundary:
+            page_start = k * psize
+            page_end_new = min((k + 1) * psize, info.new_size)
+            length = page_end_new - page_start
+            page = bytearray(length)
+            # old content of this page from snapshot vw-1 (if any)
+            old_hi = min(old_size, page_end_new)
+            if old_hi > page_start and vw - 1 > 0:
+                old = self._read_unpublished(blob_id, vw - 1, page_start, old_hi - page_start,
+                                             info)
+                page[0 : len(old)] = old
+            # overlay the new bytes
+            lo = max(off, page_start)
+            hi = min(end, page_end_new)
+            page[lo - page_start : hi - page_start] = buf[lo - off : hi - off]
+            pid = fresh_page_id()
+            group = self.pm.allocate(1)[0]
+            provs = self.pm.store_page(group, pid, bytes(page), peer=self.name)
+            stored[k - info.p0] = (pid, tuple(provs), length)
+        return True
+
+    def _read_unpublished(
+        self, blob_id: str, version: int, offset: int, size: int, info: AssignInfo
+    ) -> bytes:
+        """Read from a snapshot whose metadata is complete but possibly
+        not yet published (boundary merge against vw-1)."""
+        psize = self.vm.psize_of(blob_id)
+        rec = self.vm.update_log(blob_id, version)
+        p0, p1 = pages_spanned(offset, size, psize)
+        pd = st.read_meta(
+            self.dht, self._owner_fn(blob_id), version, rec.root_pages, p0, p1,
+            peer=self.name,
+        )
+        out = bytearray(size)
+        for d in pd:
+            page_start = d.page_index * psize
+            lo = max(offset, page_start)
+            hi = min(offset + size, page_start + d.length)
+            if hi <= lo:
+                continue
+            chunk = self.pm.fetch_page(
+                d.providers, d.page_id, off=lo - page_start, length=hi - lo,
+                peer=self.name,
+            )
+            out[lo - offset : hi - offset] = chunk
+        return bytes(out)
+
+    def _build_and_complete(self, blob_id: str, info: AssignInfo, pd_final) -> None:
+        leaves = [
+            st.PageDescriptor(info.p0 + rel, pid, tuple(provs), ln)
+            for (pid, rel, provs, ln) in pd_final
+        ]
+        border = st.BorderResolver(
+            self.dht, self._owner_fn(blob_id), info.recent_updates,
+            info.vp, info.vp_root_pages, peer=self.name,
+        )
+        st.build_meta(
+            self.dht, self._owner_fn(blob_id), info.version, info.root_pages,
+            leaves, border, peer=self.name,
+        )
+        self.vm.metadata_complete(blob_id, info.version, client=self.name)
+
+    # ------------------------------------------------- recovery (beyond paper)
+    def rebuild_metadata(self, blob_id: str, version: int) -> None:
+        """Replay BUILD_META for a writer that died after assignment.
+
+        Page descriptors come from the version manager's WAL; the
+        construction is deterministic, so replaying alongside a slow (not
+        actually dead) writer is safe — both produce identical nodes and
+        the DHT treats identical re-puts as replica re-sends.
+        """
+        info = self.vm.assign_info_for_recovery(blob_id, version)
+        rec = self.vm.update_log(blob_id, version)
+        if not rec.pd:
+            raise RuntimeError(
+                f"cannot recover {blob_id} v{version}: no page descriptors journaled"
+            )
+        self._build_and_complete(blob_id, info, rec.pd)
+
+    # ------------------------------------------------------------- passthrough
+    def get_recent(self, blob_id: str) -> int:
+        return self.vm.get_recent(blob_id, client=self.name)
+
+    def get_size(self, blob_id: str, version: int) -> int:
+        return self.vm.get_size(blob_id, version, client=self.name)
+
+    def sync(self, blob_id: str, version: int, timeout: Optional[float] = None) -> None:
+        self.vm.sync(blob_id, version, timeout=timeout, client=self.name)
+
+    def branch(self, blob_id: str, version: int) -> str:
+        bid = self.vm.branch(blob_id, version, client=self.name)
+        self._lineage_cache.pop(bid, None)
+        return bid

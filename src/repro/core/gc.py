@@ -1,0 +1,92 @@
+"""Snapshot retirement: mark-and-sweep page GC (beyond paper).
+
+The paper's copy-on-write versioning never frees pages ("versioning
+efficiency ... reasonably acceptable overhead of storage space"); a
+production deployment must retire old checkpoints.  Because metadata is
+immutable and pages are content-addressed by unique ids, GC is a pure
+mark-and-sweep over the segment trees of the snapshots to KEEP:
+
+1. mark: walk READ_META over the full range of every kept snapshot of
+   every blob (branches walk their lineage), collecting live page ids;
+2. sweep: delete unreferenced pages from providers.
+
+Metadata tree nodes of retired versions are swept by key prefix.
+Safe concurrently with readers of kept versions (their pages are
+marked); callers must quiesce readers of versions being retired —
+the version manager's published watermark makes "still referenced"
+checks trivial for the checkpoint layer (it retires only versions
+below every client's pin).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Set, Tuple
+
+from repro.core import segment_tree as st
+from repro.core.pages import node_children
+from repro.core.service import BlobSeerService
+
+
+def live_page_ids(
+    svc: BlobSeerService, keep: Dict[str, Iterable[int]]
+) -> Tuple[Set[str], Set[Tuple]]:
+    """(live page ids, live metadata node keys) for kept snapshots."""
+    client = svc.client("gc")
+    pages: Set[str] = set()
+    node_keys: Set[Tuple] = set()
+    for blob_id, versions in keep.items():
+        owner_of = client._owner_fn(blob_id)
+        for v in versions:
+            if v == 0:
+                continue
+            rec = svc.vm.update_log(blob_id, v)
+            # walk the whole tree, remembering every visited node key
+            stack = [(v, 0, rec.root_pages)]
+            while stack:
+                nv, off, size = stack.pop()
+                key = (owner_of(nv), nv, off, size)
+                if key in node_keys:
+                    continue
+                node = client.dht.get(key)
+                if node is None:
+                    continue
+                node_keys.add(key)
+                if isinstance(node, st.LeafNode):
+                    pages.add(node.page_id)
+                    continue
+                (lo, ls), (ro, rs) = node_children(off, size)
+                if node.vl is not None:
+                    stack.append((node.vl, lo, ls))
+                if node.vr is not None:
+                    stack.append((node.vr, ro, rs))
+    return pages, node_keys
+
+
+def collect_garbage(
+    svc: BlobSeerService, keep: Dict[str, Iterable[int]]
+) -> Dict[str, int]:
+    """Retire every page/metadata node not reachable from ``keep``.
+
+    ``keep`` maps blob id -> iterable of snapshot versions to preserve
+    (across branches, list each blob explicitly).  Returns sweep stats.
+    """
+    live_pages, live_nodes = live_page_ids(svc, keep)
+    swept_pages = 0
+    for prov in svc.pm.all_providers():
+        for pid in list(prov.store.iter_pids()):
+            if pid not in live_pages:
+                prov.store.delete(pid)
+                swept_pages += 1
+    swept_nodes = 0
+    for shard in svc.dht.shards:
+        with shard._lock:
+            dead = [k for k in shard._kv if k not in live_nodes]
+            for k in dead:
+                del shard._kv[k]
+            swept_nodes += len(dead)
+    return {
+        "live_pages": len(live_pages),
+        "swept_pages": swept_pages,
+        "live_nodes": len(live_nodes),
+        "swept_nodes": swept_nodes,
+    }

@@ -1,0 +1,271 @@
+"""The distributed versioned segment tree (paper §4).
+
+Each snapshot version ``v`` of a blob has a *virtual* binary segment
+tree over the page range ``[0, root_pages(v))``.  A node is keyed by
+``(owner_blob, version, offset, size)`` (offset/size in pages); inner
+nodes store the versions of their two children (``vl``, ``vr``), leaves
+store the page id and its replica providers.  Trees of successive
+snapshots share every subtree whose range does not intersect the update
+that produced the newer snapshot — the "weaving" of new metadata with
+old metadata that gives copy-on-write versioning.
+
+This module implements, faithfully:
+
+* ``read_meta``  — Algorithm 3 (READ_META): descend from the snapshot
+  root, explore children intersecting the requested range, collect page
+  descriptors from the leaves.
+* ``build_meta`` — Algorithm 4 (BUILD_META): build the new tree
+  bottom-up from the freshly written leaves, wiring border children
+  (subtrees outside the update range) to the versions resolved by a
+  :class:`BorderResolver`.
+* ``BorderResolver`` — §4.2's two-source border lookup: ranges touched
+  by *concurrent, not-yet-published* updates are resolved from the
+  version manager's in-flight registry (handed to the writer at version
+  assignment), everything else by descending the latest *published*
+  snapshot's tree with ``GET_NODE``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.dht import MetadataDHT
+from repro.core.pages import intersects, node_children
+
+# A node key in the DHT: (owner_blob_id, version, page_offset, page_size).
+NodeKey = Tuple[str, int, int, int]
+
+# Resolves a version number to the blob id that owns its tree nodes.
+# Branch lineage: versions <= branch point belong to the ancestor blob.
+OwnerFn = Callable[[int], str]
+
+
+@dataclass(frozen=True)
+class InnerNode:
+    """Inner tree node: versions of the left/right children.
+
+    ``None`` marks a child range that has never been written (it lies
+    beyond the blob's size inside the power-of-two root range); READ
+    never descends there because reads are bounds-checked upfront.
+    """
+
+    vl: Optional[int]
+    vr: Optional[int]
+
+
+@dataclass(frozen=True)
+class LeafNode:
+    """Leaf: one page. ``providers`` lists the replica endpoints."""
+
+    page_id: str
+    providers: Tuple[str, ...]
+    length: int  # actual stored bytes (the blob's last page may be short)
+
+
+@dataclass(frozen=True)
+class PageDescriptor:
+    """Element of the PD set of Algorithms 1/2."""
+
+    page_index: int  # absolute page number within the blob
+    page_id: str
+    providers: Tuple[str, ...]
+    length: int
+
+
+class MetadataMissing(RuntimeError):
+    """A tree node expected to exist was not found in the DHT."""
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3 — READ_META
+# ---------------------------------------------------------------------------
+
+
+def read_meta(
+    dht: MetadataDHT,
+    owner_of: OwnerFn,
+    version: int,
+    root_pages: int,
+    p0: int,
+    p1: int,
+    peer: Optional[str] = None,
+) -> List[PageDescriptor]:
+    """Collect page descriptors covering pages ``[p0, p1)`` of a snapshot.
+
+    Faithful to Algorithm 3: iterative exploration of the subtrees whose
+    range intersects the requested range.  Every update creates its own
+    root, so the snapshot root is node ``(version, 0, root_pages)``.
+    """
+    if p0 >= p1:
+        return []
+    out: List[PageDescriptor] = []
+    stack: List[Tuple[int, int, int]] = [(version, 0, root_pages)]
+    while stack:
+        v, off, size = stack.pop()
+        node = dht.get((owner_of(v), v, off, size), peer=peer)
+        if node is None:
+            raise MetadataMissing(f"node v={v} range=({off},{size})")
+        if isinstance(node, LeafNode):
+            out.append(PageDescriptor(off, node.page_id, node.providers, node.length))
+            continue
+        (lo, ls), (ro, rs) = node_children(off, size)
+        if node.vl is not None and intersects(lo, lo + ls, p0, p1):
+            stack.append((node.vl, lo, ls))
+        if node.vr is not None and intersects(ro, ro + rs, p0, p1):
+            stack.append((node.vr, ro, rs))
+    out.sort(key=lambda d: d.page_index)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# §4.2 — border-set resolution
+# ---------------------------------------------------------------------------
+
+
+class BorderResolver:
+    """Resolve the snapshot version owning any range outside the update.
+
+    ``recent_updates``: every update with version in ``(vp, vw)``
+    — published or not by now — as ``(version, p0, p1)``, newest first.
+    This is exactly the information the version manager registers at
+    version-assignment time (paper §4.2: the VM "will build the partial
+    set of border nodes and provide it to the writer").
+
+    ``vp``/``vp_root_pages``: a recently published snapshot used to
+    resolve all remaining border ranges by descending its tree.
+    """
+
+    def __init__(
+        self,
+        dht: MetadataDHT,
+        owner_of: OwnerFn,
+        recent_updates: Sequence[Tuple[int, int, int]],
+        vp: Optional[int],
+        vp_root_pages: int,
+        peer: Optional[str] = None,
+    ) -> None:
+        self.dht = dht
+        self.owner_of = owner_of
+        self.recent = sorted(recent_updates, key=lambda r: -r[0])
+        self.vp = vp
+        self.vp_root_pages = vp_root_pages
+        self.peer = peer
+        self._cache: Dict[Tuple[int, int], Optional[int]] = {}
+
+    def resolve(self, off: int, size: int) -> Optional[int]:
+        """Version of the node covering pages ``[off, off+size)``.
+
+        Highest version < vw whose update range intersects the node
+        range; ``None`` if the range was never written.
+        """
+        key = (off, size)
+        if key in self._cache:
+            return self._cache[key]
+        v = self._resolve(off, size)
+        self._cache[key] = v
+        return v
+
+    def _resolve(self, off: int, size: int) -> Optional[int]:
+        # 1. concurrent / recent updates (registry info, no DHT traffic)
+        for u, q0, q1 in self.recent:
+            if intersects(off, off + size, q0, q1):
+                return u
+        # 2. descend the published tree
+        if self.vp is None:
+            return None
+        if off + size > self.vp_root_pages:
+            # Beyond the published root and not touched by any recent
+            # update: never written.
+            return None
+        v, o, s = self.vp, 0, self.vp_root_pages
+        while (o, s) != (off, size):
+            node = self.dht.get((self.owner_of(v), v, o, s), peer=self.peer)
+            if node is None:
+                raise MetadataMissing(f"border descent v={v} range=({o},{s})")
+            if isinstance(node, LeafNode):
+                raise MetadataMissing(
+                    f"border descent hit leaf above target range ({off},{size})"
+                )
+            (lo, ls), (ro, rs) = node_children(o, s)
+            if off >= lo and off + size <= lo + ls:
+                v, o, s = node.vl, lo, ls
+            elif off >= ro and off + size <= ro + rs:
+                v, o, s = node.vr, ro, rs
+            else:
+                raise MetadataMissing(
+                    f"range ({off},{size}) not aligned under ({o},{s})"
+                )
+            if v is None:
+                return None
+        return v
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 4 — BUILD_META
+# ---------------------------------------------------------------------------
+
+
+def build_meta(
+    dht: MetadataDHT,
+    owner_of: OwnerFn,
+    vw: int,
+    root_pages: int,
+    leaves: Sequence[PageDescriptor],
+    border: BorderResolver,
+    peer: Optional[str] = None,
+) -> int:
+    """Build + store the tree for snapshot ``vw``; returns #nodes written.
+
+    Bottom-up construction per Algorithm 4: start from the new leaves,
+    create each parent once, wiring the child on the update side to
+    ``vw`` and the other child to the version resolved by ``border``.
+    All nodes are then written to the DHT (the paper writes them in
+    parallel; the DHT layer accounts wire cost per shard either way).
+    """
+    if not leaves:
+        raise ValueError("update with no pages")
+    blob = owner_of(vw)
+    nodes: Dict[Tuple[int, int], object] = {}
+    for d in leaves:
+        nodes[(d.page_index, 1)] = LeafNode(d.page_id, tuple(d.providers), d.length)
+
+    frontier = sorted(nodes.keys())
+    while frontier:
+        nxt: List[Tuple[int, int]] = []
+        for off, size in frontier:
+            if size >= root_pages:
+                continue  # reached the root
+            if off % (2 * size) == 0:
+                p_off, p_size, pos_left = off, 2 * size, True
+            else:
+                p_off, p_size, pos_left = off - size, 2 * size, False
+            pkey = (p_off, p_size)
+            if pkey in nodes:
+                # Sibling already created this parent; make sure the
+                # parent points at vw on our side too.
+                inner = nodes[pkey]
+                if pos_left and inner.vl != vw:
+                    nodes[pkey] = InnerNode(vl=vw, vr=inner.vr)
+                elif not pos_left and inner.vr != vw:
+                    nodes[pkey] = InnerNode(vl=inner.vl, vr=vw)
+                continue
+            (lo, ls), (ro, rs) = node_children(p_off, p_size)
+            if pos_left:
+                inner = InnerNode(vl=vw, vr=border.resolve(ro, rs))
+            else:
+                inner = InnerNode(vl=border.resolve(lo, ls), vr=vw)
+            nodes[pkey] = inner
+            nxt.append(pkey)
+        frontier = nxt
+
+    if (0, root_pages) not in nodes:
+        raise AssertionError("BUILD_META did not reach the root")
+
+    # "write N to the metadata provider" for all nodes in parallel
+    # (Alg 4 line 34): batched per home shard.
+    dht.put_many(
+        [((blob, vw, off, size), node) for (off, size), node in nodes.items()],
+        peer=peer,
+    )
+    return len(nodes)

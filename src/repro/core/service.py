@@ -1,0 +1,172 @@
+"""Deployment facade: wire + version manager + DHT + providers in one box.
+
+Mirrors the paper's §5 experimental deployments ("we deploy each the
+version manager and the provider manager on two distinct dedicated
+nodes, and we co-deploy a data provider and a metadata provider on the
+other nodes").  Tests, benchmarks, the checkpoint layer and the data
+pipeline all build one of these.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional
+
+from repro.core.blob import BlobClient
+from repro.core.dht import MetadataDHT
+from repro.core.provider import DataProvider, ProviderManager
+from repro.core.transport import Wire
+from repro.core.version_manager import VersionManager
+from repro.store.file import FilePageStore
+from repro.store.memory import MemoryPageStore
+
+
+class BlobSeerService:
+    """One BlobSeer deployment (in-process, simulated wire)."""
+
+    def __init__(
+        self,
+        n_providers: int = 4,
+        n_meta_shards: int = 4,
+        *,
+        data_replication: int = 1,
+        meta_replication: int = 1,
+        placement: str = "round_robin",
+        verify_digests: bool = False,
+        wire: Optional[Wire] = None,
+        wal_path: Optional[str] = None,
+        spool_dir: Optional[str] = None,
+        heartbeat_timeout: float = 5.0,
+        io_workers: int = 0,
+    ) -> None:
+        self.wire = wire if wire is not None else Wire()
+        self.vm = VersionManager(wire=self.wire, wal_path=wal_path)
+        self.dht = MetadataDHT(self.wire, n_meta_shards, replication=meta_replication)
+        self.pm = ProviderManager(
+            self.wire,
+            strategy=placement,
+            replication=data_replication,
+            heartbeat_timeout=heartbeat_timeout,
+        )
+        self.io_workers = io_workers
+        self._spool_dir = spool_dir
+        self._verify = verify_digests
+        self._monitor: Optional[threading.Thread] = None
+        self._monitor_stop = threading.Event()
+        for i in range(n_providers):
+            self.add_provider(f"prov-{i:04d}")
+
+    # ------------------------------------------------------------- membership
+    def add_provider(self, pid: str) -> DataProvider:
+        """A provider joins and registers with the provider manager."""
+        store = (
+            FilePageStore(f"{self._spool_dir}/{pid}") if self._spool_dir else MemoryPageStore()
+        )
+        prov = DataProvider(pid=pid, wire=self.wire, store=store, verify_digests=self._verify)
+        self.pm.register(prov)
+        return prov
+
+    def client(self, name: Optional[str] = None) -> BlobClient:
+        return BlobClient(self.vm, self.dht, self.pm, self.wire, name=name,
+                          io_workers=self.io_workers)
+
+    # -------------------------------------------------------- failure injection
+    def kill_provider(self, pid: str) -> None:
+        self.wire.set_down(pid, True)
+
+    def revive_provider(self, pid: str) -> None:
+        self.wire.set_down(pid, False)
+        self.pm.get(pid).heartbeat()
+
+    def make_straggler(self, pid: str, factor: float) -> None:
+        self.wire.set_straggler(pid, factor)
+
+    # ---------------------------------------------------- background maintenance
+    def start_monitor(self, interval: float = 0.5, stall_timeout: float = 5.0) -> None:
+        """Heartbeat sweep + stalled-writer recovery loop (beyond paper)."""
+
+        def loop() -> None:
+            agent = self.client("recovery-agent")
+            while not self._monitor_stop.wait(interval):
+                self.pm.check_heartbeats()
+                for blob_id, rec in self.vm.find_stalled(stall_timeout):
+                    try:
+                        agent.rebuild_metadata(blob_id, rec.version)
+                    except Exception:
+                        pass  # retried next sweep
+
+        self._monitor = threading.Thread(target=loop, daemon=True)
+        self._monitor.start()
+
+    def stop_monitor(self) -> None:
+        self._monitor_stop.set()
+        if self._monitor is not None:
+            self._monitor.join(timeout=2.0)
+            self._monitor = None
+        self._monitor_stop.clear()
+
+    def recover_stalled(self, stall_timeout: float = 0.0) -> int:
+        """One-shot recovery sweep; returns number of updates recovered."""
+        agent = self.client("recovery-agent")
+        n = 0
+        for blob_id, rec in self.vm.find_stalled(stall_timeout):
+            agent.rebuild_metadata(blob_id, rec.version)
+            n += 1
+        return n
+
+    # ------------------------------------------------------- full restart
+    @classmethod
+    def restore(
+        cls,
+        spool_dir: str,
+        wal_path: str,
+        n_providers: int,
+        n_meta_shards: int = 4,
+        **kwargs,
+    ) -> "BlobSeerService":
+        """Cold-restart a deployment from durable state.
+
+        Pages come back from the provider spool directories; the version
+        manager replays its WAL; the (volatile) metadata DHT is rebuilt
+        by replaying BUILD_META for every completed update in version
+        order — possible because page descriptors are journaled at
+        version-assignment time (see version_manager.assign_version).
+        """
+        svc = cls(
+            n_providers=n_providers, n_meta_shards=n_meta_shards,
+            spool_dir=spool_dir, **kwargs,
+        )
+        svc.vm = VersionManager.recover_from_wal(wal_path, wire=svc.wire)
+        agent = svc.client("rebuild-agent")
+        for blob_id in list(svc.vm._blobs):
+            b = svc.vm._blobs[blob_id]
+            for v in range(b.base_version + 1, b.last_assigned + 1):
+                rec = b.updates.get(v)
+                if rec is None or not rec.complete:
+                    continue
+                info = svc.vm.assign_info_for_recovery(blob_id, v)
+                # replay strictly in order: border nodes resolve against
+                # the just-rebuilt tree of v-1
+                info = type(info)(
+                    version=info.version, offset=info.offset,
+                    prev_size=info.prev_size, new_size=info.new_size,
+                    root_pages=info.root_pages, p0=info.p0, p1=info.p1,
+                    vp=v - 1 if v > 1 else None,
+                    vp_root_pages=(svc.vm.update_log(blob_id, v - 1).root_pages
+                                   if v > 1 else 0),
+                    recent_updates=(),
+                )
+                agent._build_and_complete(blob_id, info, rec.pd)
+        return svc
+
+    # -------------------------------------------------------------- accounting
+    def storage_report(self) -> Dict[str, object]:
+        provs = self.pm.all_providers()
+        return {
+            "providers": len(provs),
+            "pages": sum(p.page_count() for p in provs),
+            "page_bytes": sum(p.stored_bytes() for p in provs),
+            "metadata_nodes": self.dht.total_keys(),
+            "wire_bytes": self.wire.total_bytes(),
+        }

@@ -1,0 +1,165 @@
+"""Simulated transport + wire-cost accounting.
+
+The paper evaluates BlobSeer on Grid'5000 (1 Gbit/s intra-cluster
+Ethernet, measured 117.5 MB/s TCP, 0.1 ms latency).  This container is a
+single CPU core, so we cannot measure real network throughput.  Instead,
+every remote interaction goes through a :class:`Wire`, which
+
+* optionally injects *real* latency (``sleep_scale > 0``) so that
+  concurrency tests exercise true interleavings, and
+* always accounts *simulated* wire time per endpoint
+  (``latency + bytes / bandwidth``), so benchmarks can report derived
+  Grid'5000-equivalent bandwidth figures next to raw wall-clock numbers.
+
+Per-endpoint serialization is modelled with one lock per endpoint: two
+clients hitting the same provider serialize there, exactly the conflict
+the paper says the provider-manager placement strategy must minimize
+(§4.3 "data access serialization is only necessary when the same
+provider is contacted at the same time by different clients").
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict
+
+
+GRID5000_BANDWIDTH = 117.5e6  # bytes/s, measured TCP figure from the paper
+GRID5000_LATENCY = 0.1e-3     # seconds
+
+
+@dataclass
+class WireStats:
+    """Cumulative per-endpoint wire accounting."""
+
+    bytes_in: int = 0
+    bytes_out: int = 0
+    requests: int = 0
+    sim_busy_until: float = 0.0  # simulated clock: when this endpoint frees up
+
+
+class EndpointDown(RuntimeError):
+    """Raised when a failed endpoint is contacted (failure injection)."""
+
+
+@dataclass
+class Wire:
+    """Shared wire model for one deployment.
+
+    ``sleep_scale``  multiply injected real sleeps (0 = don't sleep; tests
+                     that need true interleaving set a small value).
+    """
+
+    bandwidth: float = GRID5000_BANDWIDTH
+    latency: float = GRID5000_LATENCY
+    sleep_scale: float = 0.0
+
+    _stats: Dict[str, WireStats] = field(default_factory=dict)
+    _locks: Dict[str, threading.Lock] = field(default_factory=dict)
+    _down: Dict[str, bool] = field(default_factory=dict)
+    _slow: Dict[str, float] = field(default_factory=dict)  # straggler factor
+    _global: threading.Lock = field(default_factory=threading.Lock)
+    _sim_clock: float = 0.0
+
+    # -- endpoint registry ---------------------------------------------------
+    def _ep(self, endpoint: str) -> WireStats:
+        with self._global:
+            if endpoint not in self._stats:
+                self._stats[endpoint] = WireStats()
+                self._locks[endpoint] = threading.Lock()
+            return self._stats[endpoint]
+
+    def lock(self, endpoint: str) -> threading.Lock:
+        self._ep(endpoint)
+        return self._locks[endpoint]
+
+    # -- failure / straggler injection ----------------------------------------
+    def set_down(self, endpoint: str, down: bool = True) -> None:
+        self._ep(endpoint)
+        self._down[endpoint] = down
+
+    def is_down(self, endpoint: str) -> bool:
+        return self._down.get(endpoint, False)
+
+    def set_straggler(self, endpoint: str, factor: float) -> None:
+        """Make an endpoint ``factor`` x slower (simulated + injected)."""
+        self._ep(endpoint)
+        self._slow[endpoint] = factor
+
+    # -- the actual transfer ---------------------------------------------------
+    def transfer(
+        self, endpoint: str, nbytes: int, *, inbound: bool,
+        peer: Optional[str] = None, async_peer: bool = False,
+    ) -> float:
+        """Account one request moving ``nbytes`` to/from ``endpoint``.
+
+        ``peer`` is the other side of the connection (usually the
+        client); its NIC is charged wire time too, which is what makes a
+        single appender's bandwidth top out near the measured per-link
+        figure, as in the paper's Fig 2(a).
+
+        ``async_peer`` models the paper's "for all ... in parallel"
+        loops: with many RPCs in flight, the peer's NIC is occupied by
+        the *bytes* only — per-request latency overlaps across requests
+        and is paid by the remote endpoint, not the issuing NIC.
+
+        Returns the *simulated* seconds the transfer occupied the
+        endpoint.  Raises :class:`EndpointDown` on failed endpoints.
+        """
+        if self._down.get(endpoint, False):
+            raise EndpointDown(endpoint)
+        st = self._ep(endpoint)
+        factor = self._slow.get(endpoint, 1.0)
+        cost = (self.latency + nbytes / self.bandwidth) * factor
+        with self._locks[endpoint]:
+            st.requests += 1
+            if inbound:
+                st.bytes_in += nbytes
+            else:
+                st.bytes_out += nbytes
+            # Endpoint serialization in simulated time: requests queue.
+            with self._global:
+                start = max(self._sim_clock, st.sim_busy_until)
+                st.sim_busy_until = start + cost
+        if peer is not None:
+            peer_cost = (nbytes / self.bandwidth) if async_peer else cost
+            pst = self._ep(peer)
+            with self._locks[peer]:
+                pst.requests += 1
+                if inbound:
+                    pst.bytes_out += nbytes
+                else:
+                    pst.bytes_in += nbytes
+                with self._global:
+                    start = max(self._sim_clock, pst.sim_busy_until)
+                    pst.sim_busy_until = start + peer_cost
+        if self.sleep_scale > 0.0:
+            time.sleep(cost * self.sleep_scale)
+        return cost
+
+    # -- simulated clock -------------------------------------------------------
+    def advance_clock(self, seconds: float) -> None:
+        with self._global:
+            self._sim_clock += seconds
+
+    def sim_span(self) -> float:
+        """Simulated makespan: latest endpoint-free time."""
+        with self._global:
+            busy = [s.sim_busy_until for s in self._stats.values()]
+            return max(busy) if busy else 0.0
+
+    def stats(self, endpoint: str) -> WireStats:
+        return self._ep(endpoint)
+
+    def total_bytes(self) -> int:
+        with self._global:
+            return sum(s.bytes_in + s.bytes_out for s in self._stats.values())
+
+    def reset_accounting(self) -> None:
+        with self._global:
+            for s in self._stats.values():
+                s.bytes_in = s.bytes_out = s.requests = 0
+                s.sim_busy_until = 0.0
+            self._sim_clock = 0.0

@@ -1,0 +1,459 @@
+"""The version manager (paper §3.1, §4.2, §4.3).
+
+"The version manager is the key actor of the system.  It registers
+update requests (APPEND and WRITE), assigning snapshot version numbers,
+and eventually publishes these updates, guaranteeing total ordering and
+atomicity."
+
+Responsibilities implemented here, faithfully:
+
+* assign strictly increasing snapshot versions per blob; APPEND offsets
+  are the size of the previous snapshot (assigned, possibly unpublished);
+* keep the in-flight registry of assigned-but-unpublished updates and
+  hand each new writer (a) the ranges of every update between the last
+  published snapshot and its own version — the *partial border set*
+  information of §4.2 — and (b) a recently published snapshot version to
+  resolve the rest of its border nodes;
+* publish versions **in order** once their metadata is complete, so a
+  reader can never observe snapshot ``v`` without snapshots ``< v``
+  being fully resolvable (atomicity in the sense of [9]);
+* serve GET_RECENT / GET_SIZE / SYNC.
+
+Beyond-paper (the paper defers failure handling):
+
+* every version assignment is journaled to a write-ahead log together
+  with the update's page descriptors (pages are already durably stored
+  at assignment time), so a crashed writer's metadata can be rebuilt
+  deterministically by any recovery agent (`find_stalled` +
+  ``BlobClient.rebuild_metadata``) instead of stalling the publication
+  pipeline forever;
+* the version manager itself recovers its full state from the WAL.
+"""
+
+from __future__ import annotations
+
+import itertools
+import json
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.pages import pages_spanned, root_pages_for
+from repro.core.transport import Wire
+
+VMGR_ENDPOINT = "vmgr"
+_CTRL_MSG_BYTES = 96  # wire-cost estimate of one control-plane RPC
+
+
+class BlobUnknown(KeyError):
+    pass
+
+
+class VersionUnpublished(RuntimeError):
+    pass
+
+
+class WriteBeyondEnd(ValueError):
+    """WRITE offset larger than the size of the previous snapshot."""
+
+
+@dataclass
+class UpdateRecord:
+    version: int
+    offset: int            # bytes
+    size: int              # bytes written
+    new_blob_size: int     # bytes: size of this snapshot
+    root_pages: int
+    p0: int                # page extent of the update
+    p1: int
+    is_append: bool
+    client: str
+    pd: Tuple = ()         # ((pid, rel_page_index, providers, length), ...)
+    complete: bool = False
+    assigned_at: float = field(default_factory=time.monotonic)
+
+
+@dataclass
+class BlobRecord:
+    blob_id: str
+    psize: int
+    parent: Optional[Tuple[str, int]] = None  # (parent blob id, branch version)
+    base_version: int = 0                     # versions <= base live in the parent
+    updates: Dict[int, UpdateRecord] = field(default_factory=dict)
+    last_assigned: int = 0
+    published: int = 0
+
+
+class VersionManager:
+    def __init__(self, wire: Optional[Wire] = None, wal_path: Optional[str] = None) -> None:
+        self.wire = wire
+        self._blobs: Dict[str, BlobRecord] = {}
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
+        self._ids = itertools.count(1)
+        self._wal: List[dict] = []
+        self._wal_path = wal_path
+        self._wal_file = open(wal_path, "a") if wal_path else None
+
+    # ------------------------------------------------------------------ utils
+    def _charge(self, client: Optional[str]) -> None:
+        if self.wire is not None:
+            self.wire.transfer(VMGR_ENDPOINT, _CTRL_MSG_BYTES, inbound=True, peer=client)
+
+    def _journal(self, rec: dict) -> None:
+        self._wal.append(rec)
+        if self._wal_file is not None:
+            self._wal_file.write(json.dumps(rec) + "\n")
+            self._wal_file.flush()
+
+    def _blob(self, blob_id: str) -> BlobRecord:
+        try:
+            return self._blobs[blob_id]
+        except KeyError:
+            raise BlobUnknown(blob_id)
+
+    def _record(self, blob_id: str, version: int) -> Optional[UpdateRecord]:
+        """Update record for ``version``, walking branch lineage."""
+        b = self._blob(blob_id)
+        while version <= b.base_version and b.parent is not None:
+            b = self._blob(b.parent[0])
+        return b.updates.get(version)
+
+    def owner_of(self, blob_id: str, version: int) -> str:
+        """Blob id owning the tree nodes of ``version`` (branch lineage)."""
+        b = self._blob(blob_id)
+        while version <= b.base_version and b.parent is not None:
+            b = self._blob(b.parent[0])
+        return b.blob_id
+
+    def lineage(self, blob_id: str) -> Tuple[Tuple[str, int], ...]:
+        """Branch chain as ((blob_id, base_version), ...) youngest first.
+
+        Version ``v`` is owned by the first entry with ``v > base``.
+        Clients cache this; it only ever grows by BRANCH.
+        """
+        with self._lock:
+            chain: List[Tuple[str, int]] = []
+            b = self._blob(blob_id)
+            while True:
+                chain.append((b.blob_id, b.base_version))
+                if b.parent is None:
+                    break
+                b = self._blob(b.parent[0])
+            return tuple(chain)
+
+    def _size_of(self, blob_id: str, version: int) -> int:
+        if version == 0:
+            return 0
+        rec = self._record(blob_id, version)
+        if rec is None:
+            raise VersionUnpublished(f"{blob_id} v{version} not assigned")
+        return rec.new_blob_size
+
+    def _root_pages_of(self, blob_id: str, version: int) -> int:
+        if version == 0:
+            return 0
+        rec = self._record(blob_id, version)
+        if rec is None:
+            raise VersionUnpublished(f"{blob_id} v{version} not assigned")
+        return rec.root_pages
+
+    # ------------------------------------------------------------- public API
+    def create(self, psize: int, client: Optional[str] = None) -> str:
+        """CREATE: new empty blob, snapshot 0 (size 0)."""
+        self._charge(client)
+        with self._lock:
+            blob_id = f"blob-{next(self._ids):08d}"
+            self._blobs[blob_id] = BlobRecord(blob_id=blob_id, psize=psize)
+            self._journal({"op": "create", "blob": blob_id, "psize": psize})
+            return blob_id
+
+    def branch(self, blob_id: str, version: int, client: Optional[str] = None) -> str:
+        """BRANCH: fork ``blob_id`` at published snapshot ``version``."""
+        self._charge(client)
+        with self._lock:
+            src = self._blob(blob_id)
+            if version > src.published:
+                raise VersionUnpublished(f"{blob_id} v{version} not published")
+            bid = f"blob-{next(self._ids):08d}"
+            self._blobs[bid] = BlobRecord(
+                blob_id=bid,
+                psize=src.psize,
+                parent=(blob_id, version),
+                base_version=version,
+                last_assigned=version,
+                published=version,
+            )
+            self._journal({"op": "branch", "blob": bid, "src": blob_id, "at": version})
+            return bid
+
+    def get_recent(self, blob_id: str, client: Optional[str] = None) -> int:
+        """GET_RECENT: a recently published version (>= all published before)."""
+        self._charge(client)
+        with self._lock:
+            return self._blob(blob_id).published
+
+    def get_size(self, blob_id: str, version: int, client: Optional[str] = None) -> int:
+        """GET_SIZE of a *published* snapshot (paper: fails otherwise)."""
+        self._charge(client)
+        with self._lock:
+            if version > self._blob(blob_id).published:
+                raise VersionUnpublished(f"{blob_id} v{version} not published")
+            return self._size_of(blob_id, version)
+
+    def psize_of(self, blob_id: str) -> int:
+        with self._lock:
+            return self._blob(blob_id).psize
+
+    def sync(self, blob_id: str, version: int, timeout: Optional[float] = None,
+             client: Optional[str] = None) -> None:
+        """SYNC: block until ``version`` is published."""
+        self._charge(client)
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while self._blob(blob_id).published < version:
+                remaining = None if deadline is None else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(f"SYNC {blob_id} v{version}")
+                self._cond.wait(remaining)
+
+    def is_published(self, blob_id: str, version: int) -> bool:
+        with self._lock:
+            return version <= self._blob(blob_id).published
+
+    # ----------------------------------------------------- update registration
+    def assign_version(
+        self,
+        blob_id: str,
+        offset: Optional[int],     # None => APPEND
+        size: int,
+        client: str,
+        pd: Tuple = (),
+    ) -> "AssignInfo":
+        """Register an update; returns everything the writer needs (§4.2).
+
+        The page descriptors ``pd`` (for pages already stored) are
+        journaled so a recovery agent can replay BUILD_META if the
+        writer dies before completing its metadata.
+        """
+        self._charge(client)
+        with self._lock:
+            b = self._blob(blob_id)
+            prev_size = self._size_of(blob_id, b.last_assigned)
+            if offset is None:
+                offset = prev_size           # APPEND semantics
+                is_append = True
+            else:
+                is_append = False
+                if offset > prev_size:
+                    raise WriteBeyondEnd(
+                        f"offset {offset} > size {prev_size} of snapshot v{b.last_assigned}"
+                    )
+            if size <= 0:
+                raise ValueError("update size must be positive")
+            vw = b.last_assigned + 1
+            b.last_assigned = vw
+            new_size = max(prev_size, offset + size)
+            root_pages = root_pages_for(new_size, b.psize)
+            p0, p1 = pages_spanned(offset, size, b.psize)
+            rec = UpdateRecord(
+                version=vw, offset=offset, size=size, new_blob_size=new_size,
+                root_pages=root_pages, p0=p0, p1=p1, is_append=is_append,
+                client=client, pd=tuple(pd),
+            )
+            b.updates[vw] = rec
+            # §4.2: ranges of every update between the last published
+            # snapshot and vw — the information from which the writer
+            # resolves border nodes of concurrent unpublished updates.
+            vp = b.published
+            recent: List[Tuple[int, int, int]] = []
+            for u in range(vp + 1, vw):
+                r = b.updates.get(u)
+                if r is not None:
+                    recent.append((r.version, r.p0, r.p1))
+            vp_out: Optional[int] = vp if vp > 0 else None
+            vp_root = self._root_pages_of(blob_id, vp) if vp > 0 else 0
+            self._journal({
+                "op": "assign", "blob": blob_id, "v": vw, "offset": offset,
+                "size": size, "new_size": new_size, "append": is_append,
+                "client": client, "pd": [list(x) for x in pd],
+            })
+            return AssignInfo(
+                version=vw, offset=offset, prev_size=prev_size,
+                new_size=new_size, root_pages=root_pages, p0=p0, p1=p1,
+                vp=vp_out, vp_root_pages=vp_root, recent_updates=tuple(recent),
+            )
+
+    def register_pd(self, blob_id: str, version: int, pd: Tuple,
+                    client: Optional[str] = None) -> None:
+        """(Re-)journal the final page-descriptor set for an update.
+
+        Used by APPENDs (which learn their offset at assignment) and by
+        unaligned WRITEs (whose boundary pages are stored after
+        assignment).  Keeps WAL-based recovery deterministic.
+        """
+        self._charge(client)
+        with self._lock:
+            rec = self._blob(blob_id).updates[version]
+            rec.pd = tuple(pd)
+            self._journal({
+                "op": "pd", "blob": blob_id, "v": version,
+                "pd": [list(x) for x in pd],
+            })
+
+    def metadata_complete(self, blob_id: str, version: int,
+                          client: Optional[str] = None) -> None:
+        """Writer finished BUILD_META; publish in order (atomicity)."""
+        self._charge(client)
+        with self._cond:
+            b = self._blob(blob_id)
+            rec = b.updates[version]
+            rec.complete = True
+            self._journal({"op": "complete", "blob": blob_id, "v": version})
+            # In-order publication: snapshot v is revealed only once every
+            # snapshot < v is published, so readers can always resolve the
+            # full weaved tree of anything they are allowed to see.
+            while True:
+                nxt = b.updates.get(b.published + 1)
+                if nxt is None or not nxt.complete:
+                    break
+                b.published += 1
+                self._journal({"op": "publish", "blob": blob_id, "v": b.published})
+            self._cond.notify_all()
+
+    def wait_metadata(self, blob_id: str, version: int,
+                      timeout: Optional[float] = None) -> None:
+        """Block until ``version``'s metadata is complete (not necessarily
+        published).  Needed only by unaligned writes that must merge
+        boundary-page content from snapshot ``version`` (§3 "slightly
+        more complex" path)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while True:
+                b = self._blob(blob_id)
+                if version <= b.base_version and b.parent is not None:
+                    if self._record(blob_id, version) is not None or version == 0:
+                        return
+                rec = b.updates.get(version)
+                if version == 0 or version <= b.published or (rec is not None and rec.complete):
+                    return
+                remaining = None if deadline is None else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(f"metadata {blob_id} v{version}")
+                self._cond.wait(remaining)
+
+    # ----------------------------------------------------------- introspection
+    def update_log(self, blob_id: str, version: int) -> UpdateRecord:
+        with self._lock:
+            rec = self._record(blob_id, version)
+            if rec is None:
+                raise VersionUnpublished(f"{blob_id} v{version} not assigned")
+            return rec
+
+    def root_pages_published(self, blob_id: str, version: int) -> int:
+        with self._lock:
+            if version > self._blob(blob_id).published:
+                raise VersionUnpublished(f"{blob_id} v{version} not published")
+            return self._root_pages_of(blob_id, version)
+
+    # ------------------------------------------------------- failure handling
+    def find_stalled(self, timeout: float) -> List[Tuple[str, UpdateRecord]]:
+        """Assigned-but-incomplete updates older than ``timeout`` seconds.
+
+        These block the publication pipeline (in-order publishing); a
+        recovery agent replays their metadata from the journaled page
+        descriptors and calls :meth:`metadata_complete`.
+        """
+        now = time.monotonic()
+        out = []
+        with self._lock:
+            for b in self._blobs.values():
+                for v in range(b.published + 1, b.last_assigned + 1):
+                    rec = b.updates.get(v)
+                    if rec is not None and not rec.complete and now - rec.assigned_at > timeout:
+                        out.append((b.blob_id, rec))
+        return out
+
+    def assign_info_for_recovery(self, blob_id: str, version: int) -> "AssignInfo":
+        """Reconstruct the AssignInfo a dead writer was handed."""
+        with self._lock:
+            b = self._blob(blob_id)
+            rec = b.updates[version]
+            vp = b.published
+            recent = tuple(
+                (r.version, r.p0, r.p1)
+                for u in range(vp + 1, version)
+                if (r := b.updates.get(u)) is not None
+            )
+            return AssignInfo(
+                version=version, offset=rec.offset,
+                prev_size=self._size_of(blob_id, version - 1) if version > 1 else 0,
+                new_size=rec.new_blob_size, root_pages=rec.root_pages,
+                p0=rec.p0, p1=rec.p1,
+                vp=vp if vp > 0 else None,
+                vp_root_pages=self._root_pages_of(blob_id, vp) if vp > 0 else 0,
+                recent_updates=recent,
+            )
+
+    # ------------------------------------------------------------ WAL recovery
+    @classmethod
+    def recover_from_wal(cls, wal_path: str, wire: Optional[Wire] = None) -> "VersionManager":
+        """Rebuild full version-manager state from the journal."""
+        vm = cls(wire=wire)
+        max_id = 0
+        with open(wal_path) as f:
+            for line in f:
+                rec = json.loads(line)
+                op = rec["op"]
+                if op == "create":
+                    vm._blobs[rec["blob"]] = BlobRecord(rec["blob"], rec["psize"])
+                    max_id = max(max_id, int(rec["blob"].split("-")[1]))
+                elif op == "branch":
+                    src = vm._blobs[rec["src"]]
+                    vm._blobs[rec["blob"]] = BlobRecord(
+                        blob_id=rec["blob"], psize=src.psize,
+                        parent=(rec["src"], rec["at"]), base_version=rec["at"],
+                        last_assigned=rec["at"], published=rec["at"],
+                    )
+                    max_id = max(max_id, int(rec["blob"].split("-")[1]))
+                elif op == "assign":
+                    b = vm._blobs[rec["blob"]]
+                    psz = b.psize
+                    p0, p1 = pages_spanned(rec["offset"], rec["size"], psz)
+                    b.updates[rec["v"]] = UpdateRecord(
+                        version=rec["v"], offset=rec["offset"], size=rec["size"],
+                        new_blob_size=rec["new_size"],
+                        root_pages=root_pages_for(rec["new_size"], psz),
+                        p0=p0, p1=p1, is_append=rec["append"], client=rec["client"],
+                        pd=tuple(tuple(x) for x in rec["pd"]),
+                    )
+                    b.last_assigned = max(b.last_assigned, rec["v"])
+                elif op == "pd":
+                    vm._blobs[rec["blob"]].updates[rec["v"]].pd = tuple(
+                        tuple(x) for x in rec["pd"]
+                    )
+                elif op == "complete":
+                    vm._blobs[rec["blob"]].updates[rec["v"]].complete = True
+                elif op == "publish":
+                    vm._blobs[rec["blob"]].published = rec["v"]
+        vm._ids = itertools.count(max_id + 1)
+        vm._wal_path = wal_path
+        vm._wal_file = open(wal_path, "a")
+        return vm
+
+
+@dataclass(frozen=True)
+class AssignInfo:
+    """Everything a writer receives from the version manager (§4.2)."""
+
+    version: int
+    offset: int
+    prev_size: int
+    new_size: int
+    root_pages: int
+    p0: int
+    p1: int
+    vp: Optional[int]                       # recently published snapshot
+    vp_root_pages: int
+    recent_updates: Tuple[Tuple[int, int, int], ...]  # (version, p0, p1), unpublished-at-assign

@@ -1,0 +1,6 @@
+"""BlobSeer-backed data pipeline."""
+
+from repro.data.pipeline import CorpusWriter, ShardedReader
+from repro.data.tokenizer import ByteTokenizer
+
+__all__ = ["CorpusWriter", "ShardedReader", "ByteTokenizer"]

@@ -1,0 +1,17 @@
+"""Distribution: logical-axis partitioning, collectives, mesh helpers."""
+
+from repro.distributed.axes import (
+    constrain,
+    logical_to_spec,
+    set_logical_rules,
+    clear_logical_rules,
+    current_mesh,
+)
+
+__all__ = [
+    "constrain",
+    "logical_to_spec",
+    "set_logical_rules",
+    "clear_logical_rules",
+    "current_mesh",
+]

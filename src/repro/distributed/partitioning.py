@@ -1,0 +1,271 @@
+"""Partitioning rules: logical axes -> mesh axes, with divisibility guards.
+
+Strategies (select with ``--strategy`` or per-arch defaults):
+
+* ``tp``        — Megatron-style tensor parallelism over "model"
+                  (heads / d_ff / vocab / experts), pure DP over
+                  "data" (+ "pod").  Parameters replicated across DP.
+* ``tp_fsdp``   — ``tp`` + ZeRO-3: the "embed" dimension of every
+                  weight is sharded over ("pod", "data"); XLA inserts
+                  all-gathers on use and reduce-scatters on grads.
+                  Required for the 32B/76B cells (replicated params
+                  would not fit 16 GB/chip).
+* ``tp_fsdp_sp``— ``tp_fsdp`` + sequence sharding of activations
+                  (long-prefill cells).
+
+A physical axis is silently dropped for a given array dimension when the
+dimension is not divisible by the axis size (e.g. kv_heads=8 on a
+16-way "model" axis, vocab=49155 which is odd) — the guard keeps every
+(arch x mesh) cell lowerable; the §Roofline table shows what it costs.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# rule tables
+# ---------------------------------------------------------------------------
+
+_DP = ("pod", "data")     # data-parallel super-axis (collapses if absent)
+
+RULESETS: Dict[str, Dict[str, Any]] = {
+    "tp": {
+        # parameters
+        "vocab": "model",
+        "embed": None,
+        "mlp": "model",
+        "q_heads": "model",
+        "kv_heads": "model",
+        "head": None,
+        "experts": "model",
+        "rnn": "model",
+        "rnn_up": "model",
+        "rnn_gate": "model",
+        "rnn_gates": "model",
+        "gates": None,
+        "conv": None,
+        "layers": None,
+        # activations
+        "batch": _DP,
+        "seq": None,
+        "embed_act": None,
+        "heads_act": "model",
+        "kv_act": "model",
+        "kv_seq": None,
+        "mlp_act": "model",
+        "experts_act": "model",
+        "vocab_act": "model",
+    },
+}
+
+RULESETS["tp_fsdp"] = dict(RULESETS["tp"], embed=_DP)
+RULESETS["tp_fsdp_sp"] = dict(RULESETS["tp_fsdp"], seq="data")
+# Serving: KV cache seq-dim sharding kicks in when kv_heads doesn't divide
+# the model axis (GQA kv=8 on 16-way TP) — the used-axis guard in spec_for
+# prefers kv_heads and falls back to kv_seq automatically.
+RULESETS["tp_serve"] = dict(RULESETS["tp"], kv_seq="model")
+# Head-dim cache sharding: decode writes (dynamic_update_slice at a traced
+# position) stay LOCAL because the seq dim is unsharded; the dh-contraction
+# produces partial scores all-reduced per token.  Fixes the DUS-induced
+# cache gather that blows HBM for kv_heads-indivisible archs (§Perf-D).
+RULESETS["tp_serve_hd"] = dict(RULESETS["tp"], kv_seq=None, head="model")
+
+SHARD_DECODE_FLAG = "__shard_decode__"
+# Hand-scheduled decode: seq-sharded cache + shard_map flash-combine
+# (distributed/decode_attn.py) — local cache writes, O(B·H·dh) combine
+# collectives.  Selected when kv_heads don't divide the model axis or
+# the GSPMD path's aliasing is insufficient (§Perf-D round 2).
+RULESETS["tp_serve_sm"] = dict(RULESETS["tp_serve"], **{SHARD_DECODE_FLAG: True})
+
+_ALL = ("pod", "data", "model")
+# Pure data-parallel layout for small models on big meshes: params
+# replicated (ZeRO shards the embed dim across ALL chips for storage),
+# batch sharded over every mesh axis, no tensor parallelism — kills the
+# per-layer TP all-reduces that dominate small-d_model archs at 256 chips.
+RULESETS["dp_fsdp"] = {
+    "vocab": None, "embed": _ALL, "mlp": None, "q_heads": None,
+    "kv_heads": None, "head": None, "experts": None, "rnn": None,
+    "rnn_up": None, "rnn_gate": None, "rnn_gates": None, "gates": None,
+    "conv": None, "layers": None,
+    "batch": _ALL, "seq": None, "embed_act": None, "heads_act": None,
+    "kv_act": None, "kv_seq": None, "mlp_act": None, "experts_act": None,
+    "vocab_act": None,
+}
+
+UNEVEN_FLAG = "__uneven__"
+
+
+def get_rules(strategy: str) -> Dict[str, Any]:
+    """Resolve a strategy name.  Suffixes compose:
+
+    * ``_uneven`` relaxes the divisibility guard (GSPMD pads): 40 heads
+      on a 16-way axis shard as ceil(40/16)=3 per device (1.2x padding)
+      instead of replicating 16x;
+    * ``_zero2`` is consumed by the step builder (hoisted param gather)
+      and does not change the rule table.
+    """
+    base = strategy
+    uneven = False
+    for _ in range(2):
+        if base.endswith("_uneven"):
+            uneven = True
+            base = base[: -len("_uneven")]
+        if base.endswith("_zero2"):
+            base = base[: -len("_zero2")]
+    rules = dict(RULESETS[base])
+    if uneven:
+        rules[UNEVEN_FLAG] = True
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# spec construction with divisibility guards
+# ---------------------------------------------------------------------------
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape.get(axis, 1) if axis in mesh.axis_names else 0
+    return math.prod(_axis_size(mesh, a) for a in axis)
+
+
+def spec_for(
+    mesh: Mesh,
+    rules: Dict[str, Any],
+    names: Sequence[Optional[str]],
+    shape: Sequence[int],
+) -> P:
+    """PartitionSpec for one array given its logical names + shape."""
+    parts = []
+    used: set = set()
+    uneven_ok = bool(rules.get(UNEVEN_FLAG))
+    for dim, name in zip(shape, names):
+        axis = rules.get(name) if name is not None else None
+        if axis is None:
+            parts.append(None)
+            continue
+        flat = (axis,) if isinstance(axis, str) else tuple(axis)
+        flat = tuple(a for a in flat if a in mesh.axis_names and a not in used)
+        total = math.prod(mesh.shape[a] for a in flat) if flat else 1
+        # divisibility guard: drop trailing axes until it divides —
+        # unless uneven sharding is allowed and the dim spans the axis
+        # (GSPMD pads; waste factor = ceil(dim/total)*total/dim)
+        while flat and dim % total != 0 and not (uneven_ok and dim >= total):
+            flat = flat[:-1]
+            total = math.prod(mesh.shape[a] for a in flat) if flat else 1
+        if not flat:
+            parts.append(None)
+            continue
+        used.update(flat)
+        parts.append(flat if len(flat) > 1 else flat[0])
+    return P(*parts)
+
+
+def param_shardings(mesh: Mesh, rules: Dict[str, Any], abstract_params, axes_tree):
+    """NamedSharding tree for a (abstract) param tree + its axes twin."""
+    def one(p, names):
+        return NamedSharding(mesh, spec_for(mesh, rules, names, p.shape))
+
+    return jax.tree.map(one, abstract_params, axes_tree)
+
+
+def sharding(mesh: Mesh, rules: Dict[str, Any], names, shape) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(mesh, rules, names, shape))
+
+
+# ---------------------------------------------------------------------------
+# batch / cache axes (path-based annotation)
+# ---------------------------------------------------------------------------
+
+
+def batch_axes_for(batch_tree) -> Any:
+    """Logical axes for an input batch dict (tokens/labels/embeds)."""
+    def one(path, leaf):
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if key in ("tokens", "labels"):
+            return ("batch", "seq")
+        if key in ("vision_embeds", "enc_embeds"):
+            return ("batch", "seq", "embed_act")
+        if key in ("token",):
+            return ("batch",)
+        return tuple([None] * np.ndim(leaf))
+
+    return _map_with_path(one, batch_tree)
+
+
+def cache_axes_for(cache_tree) -> Any:
+    """Logical axes for KV/state caches by leaf name + rank.
+
+    Handles both the decoder layout ({"groups": [stacked...], "rest":
+    [...]}) and the enc-dec layout (one stacked tree): any k/v leaf of
+    rank 5 carries a leading "layers" axis, rank 4 does not.
+    """
+    # base (unstacked) logical names per leaf key; a leading "layers"
+    # axis is inferred whenever the leaf's rank exceeds the base rank.
+    BASE = {
+        "k": ("batch", "kv_heads", "kv_seq", "head"),
+        "v": ("batch", "kv_heads", "kv_seq", "head"),
+        "pos": (None,),
+        "conv": ("batch", None, "rnn"),
+        "C": ("batch", "q_heads", None, None),
+    }
+    AMBIG = {  # two legal base forms (mlstm vs slstm states)
+        "h": [("batch", "rnn")],
+        "n": [("batch", "q_heads", "head"), ("batch", "rnn")],
+        "m": [("batch", "q_heads"), ("batch", "rnn")],
+        "c": [("batch", "rnn")],
+    }
+
+    def one(path, leaf):
+        key = None
+        for entry in reversed(path):
+            if hasattr(entry, "key"):
+                key = entry.key
+                break
+        rank = np.ndim(leaf)
+        candidates = [BASE[key]] if key in BASE else AMBIG.get(key, [])
+        for base in candidates:
+            if rank == len(base):
+                return base
+            if rank == len(base) + 1:
+                return ("layers",) + base
+        return tuple([None] * rank)
+
+    return _map_with_path(one, cache_tree)
+
+
+def memories_axes_for(mem_tree) -> Any:
+    """Cross-attention memories: (layers, B, H, T, Dh) leaves."""
+    def one(path, leaf):
+        rank = np.ndim(leaf)
+        if rank == 5:
+            return ("layers", "batch", "kv_heads", None, "head")
+        return tuple([None] * rank)
+
+    return _map_with_path(one, mem_tree)
+
+
+def _under_groups(path) -> bool:
+    for entry in path:
+        if hasattr(entry, "key") and entry.key == "groups":
+            return True
+    return False
+
+
+def _map_with_path(fn, tree):
+    return jax.tree_util.tree_map_with_path(fn, tree)
+
+
+def shardings_for_tree(mesh: Mesh, rules, abstract_tree, axes_tree):
+    def one(leaf, names):
+        return NamedSharding(mesh, spec_for(mesh, rules, names, leaf.shape))
+
+    return jax.tree.map(one, abstract_tree, axes_tree)

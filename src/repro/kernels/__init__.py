@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+* ``page_digest`` / ``delta_mask`` — the BlobSeer incremental-checkpoint
+  scan (digest device-resident pages, emit changed-page bitmap);
+* ``flash_attention`` — blockwise online-softmax GQA attention
+  (prefill/decode serving path);
+* ``linear_scan`` — chunked diagonal linear recurrence (RG-LRU / xLSTM).
+
+Use ``repro.kernels.ops`` (backend dispatch); ``repro.kernels.ref``
+holds the pure-jnp oracles.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: changed-page bitmap from digest comparison.
+
+Second half of the incremental-checkpoint hot path: compare this step's
+page digests against the previous checkpoint's and emit a 0/1 mask (as
+uint32 — TPU vregs have no packed bool) plus, on the host side of
+``ops.py``, the changed-page count used to size the WRITE.
+
+Trivially bandwidth-bound; exists as a kernel so the whole
+digest->delta pipeline stays on-device with one fused dispatch each.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+U32 = jnp.uint32
+
+
+def _delta_kernel(new_ref, old_ref, o_ref):
+    neq = (new_ref[...] != old_ref[...]).any(axis=1)
+    o_ref[...] = neq.astype(U32)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("page_tile", "interpret"))
+def delta_mask_pallas(
+    new_digest: jax.Array,
+    old_digest: jax.Array,
+    *,
+    page_tile: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """(n,2),(n,2) u32 -> (n,) u32 0/1 changed mask via Pallas."""
+    n = new_digest.shape[0]
+    pad = (-n) % page_tile
+    if pad:
+        new_digest = jnp.pad(new_digest, ((0, pad), (0, 0)))
+        old_digest = jnp.pad(old_digest, ((0, pad), (0, 0)))
+    P = new_digest.shape[0]
+    out = pl.pallas_call(
+        _delta_kernel,
+        grid=(P // page_tile,),
+        in_specs=[
+            pl.BlockSpec((page_tile, 2), lambda i: (i, 0)),
+            pl.BlockSpec((page_tile, 2), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((page_tile, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((P, 1), U32),
+        interpret=interpret,
+    )(new_digest, old_digest)
+    return out[:n, 0]

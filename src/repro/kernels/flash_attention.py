@@ -1,0 +1,169 @@
+"""Pallas TPU kernel: blockwise online-softmax (flash) attention forward.
+
+The serving hot-spot for every attention-bearing assigned architecture
+(prefill_32k / decode_32k shapes).  GQA-aware: query heads are grouped
+over shared KV heads; causal and sliding-window (local) masks supported,
+which covers qwen3/qwen1.5/olmo/olmoe/granite (causal), danube3
+(SWA 4096) and recurrentgemma (local 2048).
+
+TPU adaptation (vs. the CUDA flash-attention formulation):
+
+* blocks are (block_q, head_dim) x (block_k, head_dim) MXU tiles with
+  head_dim padded to a lane multiple (128);
+* the KV axis is the innermost sequential grid dimension; running max
+  ``m``, normalizer ``l`` and the output accumulator live in VMEM
+  scratch across KV steps (no atomics / warp shuffles — the sequential
+  grid is the TPU-native way to express the online softmax);
+* with a sliding window, KV blocks wholly outside the window are
+  skipped via ``pl.when`` so local attention costs O(T * window).
+
+Forward only: training uses the blockwise-jnp reference (differentiable
+under XLA); serving uses this kernel on TPU.  ``ops.flash_attention``
+dispatches.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale, block_q, block_k, causal, window, q_offset, softcap, kv_len,
+):
+    """Grid: (batch*q_heads, num_q_blocks, num_k_blocks); k sequential."""
+    iq, ik = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qpos = q_offset + iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    # Cheap block-level skip: is any (q, k) pair in this block live?
+    live = jnp.asarray(ik * block_k < kv_len)  # padded tail blocks are dead
+    if causal:
+        first_q = q_offset + iq * block_q
+        last_q = first_q + block_q - 1
+        first_k = ik * block_k
+        live = jnp.logical_and(live, first_k <= last_q)
+    if window is not None:
+        last_k = ik * block_k + block_k - 1
+        first_q = q_offset + iq * block_q
+        live = jnp.logical_and(live, last_k > first_q - window)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )                                                  # (bq, bk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = kpos < kv_len                               # mask padded keys
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                                # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                             # (bq, bk)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                    # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _flush():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully masked rows -> zeros
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "softcap",
+                     "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    softcap: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """GQA flash attention. q: (B,Hq,Tq,D); k,v: (B,Hkv,Tk,D)."""
+    B, Hq, Tq, D = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0, "query heads must group over kv heads"
+    group = Hq // Hkv
+    scale = D ** -0.5
+
+    block_q = min(block_q, Tq)
+    block_k = min(block_k, Tk)
+    pad_q = (-Tq) % block_q
+    pad_k = (-Tk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        # padded keys are masked inside the kernel via kv_len
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Tqp, Tkp = q.shape[2], k.shape[2]
+
+    qf = q.reshape(B * Hq, Tqp, D)
+    kf = k.reshape(B * Hkv, Tkp, D)
+    vf = v.reshape(B * Hkv, Tkp, D)
+
+    grid = (B * Hq, Tqp // block_q, Tkp // block_k)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=scale, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, q_offset=q_offset, softcap=softcap,
+        kv_len=Tk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j, g=group: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Tqp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out.reshape(B, Hq, Tqp, D)
+    if pad_q:
+        out = out[:, :, :Tq]
+    return out

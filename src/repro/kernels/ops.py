@@ -1,0 +1,152 @@
+"""Public kernel API with backend dispatch.
+
+Callers use these wrappers, never the kernels directly:
+
+* on TPU the Pallas kernels run compiled;
+* on CPU (this container) the pure-jnp references run under jit, and the
+  Pallas kernels can be forced through the interpreter with
+  ``REPRO_PALLAS=interpret`` (the kernel-vs-oracle test path).
+
+Every wrapper normalizes shapes/dtypes so the Pallas and reference paths
+see bit-identical inputs — the correctness contract the tests assert.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.delta_mask import delta_mask_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.linear_scan import linear_scan_pallas
+from repro.kernels.page_digest import page_digest_pallas
+
+DIGEST_BLOCK_WORDS = 512
+
+
+def _backend() -> str:
+    return jax.default_backend()
+
+
+def use_pallas() -> bool:
+    mode = os.environ.get("REPRO_PALLAS", "auto")
+    if mode == "off":
+        return False
+    if mode in ("on", "interpret"):
+        return True
+    return _backend() == "tpu"
+
+
+def _interpret() -> bool:
+    if os.environ.get("REPRO_PALLAS") == "interpret":
+        return True
+    return _backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# digest / delta
+# ---------------------------------------------------------------------------
+
+
+def as_page_words(data: jax.Array, page_bytes: int) -> jax.Array:
+    """Reinterpret a flat array as (n_pages, words) u32, zero-padded.
+
+    The canonical digest domain: bytes are padded to a whole number of
+    ``page_bytes`` pages and each page to a multiple of
+    ``DIGEST_BLOCK_WORDS`` 32-bit words, identically for both backends.
+    """
+    assert page_bytes % 4 == 0
+    flat = data.reshape(-1)
+    as_bytes = jax.lax.bitcast_convert_type(flat, jnp.uint8).reshape(-1)
+    pad = (-as_bytes.shape[0]) % page_bytes
+    if pad:
+        as_bytes = jnp.pad(as_bytes, (0, pad))
+    n_pages = as_bytes.shape[0] // page_bytes
+    words = jax.lax.bitcast_convert_type(
+        as_bytes.reshape(n_pages, page_bytes // 4, 4), jnp.uint32
+    )
+    word_pad = (-words.shape[1]) % DIGEST_BLOCK_WORDS
+    if word_pad:
+        words = jnp.pad(words, ((0, 0), (0, word_pad)))
+    return words
+
+
+@functools.partial(jax.jit, static_argnames=("page_bytes",))
+def _page_digest_ref(data: jax.Array, page_bytes: int) -> jax.Array:
+    return _ref.ref_page_digest(as_page_words(data, page_bytes))
+
+
+def page_digest(data: jax.Array, page_bytes: int = 64 * 1024) -> jax.Array:
+    """Digest device-resident data as (n_pages, 2) u32 fingerprints."""
+    if use_pallas():
+        words = as_page_words(data, page_bytes)
+        return page_digest_pallas(
+            words, block_w=DIGEST_BLOCK_WORDS, interpret=_interpret()
+        )
+    return _page_digest_ref(data, page_bytes)
+
+
+@jax.jit
+def _delta_mask_ref(new_digest: jax.Array, old_digest: jax.Array) -> jax.Array:
+    return _ref.ref_delta_mask(new_digest, old_digest)
+
+
+def delta_mask(new_digest: jax.Array, old_digest: jax.Array) -> jax.Array:
+    """(n,) bool — pages whose digest changed since the last checkpoint."""
+    if use_pallas():
+        return delta_mask_pallas(new_digest, old_digest, interpret=_interpret()) != 0
+    return _delta_mask_ref(new_digest, old_digest)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "q_offset", "softcap")
+)
+def _attention_ref(q, k, v, causal, window, q_offset, softcap):
+    return _ref.ref_attention(
+        q, k, v, causal=causal, window=window, q_offset=q_offset, softcap=softcap
+    )
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    softcap: float | None = None,
+) -> jax.Array:
+    """GQA attention; Pallas on TPU, reference elsewhere (differentiable)."""
+    if use_pallas():
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            softcap=softcap, interpret=_interpret(),
+        )
+    return _attention_ref(q, k, v, causal, window, q_offset, softcap)
+
+
+# ---------------------------------------------------------------------------
+# linear scan
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _linear_scan_ref(a, x):
+    return _ref.ref_linear_scan(a, x)
+
+
+def linear_scan(a: jax.Array, x: jax.Array) -> jax.Array:
+    """h_t = a_t * h_{t-1} + x_t over (B, T, D)."""
+    if use_pallas():
+        return linear_scan_pallas(a, x, interpret=_interpret())
+    return _linear_scan_ref(a, x)

@@ -1,0 +1,111 @@
+"""Batched serving driver: prefill + decode with sharded KV caches.
+
+Serves a (reduced or full) arch config with batched requests; greedy or
+temperature sampling.  The KV-cache snapshot can be persisted to a
+BlobSeer blob between sessions (versioned, branchable prompt caches —
+the storage substrate reused on the serving side).
+
+Usage (CPU scale)::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b \
+        --prompt "hello world" --max-new 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data import ByteTokenizer
+from repro.launch.mesh import make_mesh
+from repro.models import build_model
+from repro.train.step import TrainStepBuilder
+
+
+def generate(
+    model,
+    params,
+    prompts: List[np.ndarray],
+    *,
+    max_new: int,
+    max_len: int,
+    temperature: float = 0.0,
+    rng: Optional[jax.Array] = None,
+    mesh=None,
+    strategy: str = "tp",
+) -> List[np.ndarray]:
+    """Greedy/temperature generation for a batch of equal-length prompts."""
+    cfg = model.cfg
+    B = len(prompts)
+    T0 = len(prompts[0])
+    assert all(len(p) == T0 for p in prompts), "pad prompts to equal length"
+    tokens = jnp.asarray(np.stack(prompts).astype(np.int32))
+    cache = model.init_cache(B, max_len)
+
+    builder = TrainStepBuilder(model, mesh, strategy=strategy) if mesh else None
+    prefill = jax.jit(builder.prefill_step_fn()) if builder else jax.jit(
+        lambda p, b, c: model.prefill(p, b, c))
+    decode = jax.jit(builder.decode_step_fn()) if builder else jax.jit(
+        lambda p, t, i, c: model.decode_step(p, t, i, c))
+
+    batch = {"tokens": tokens}
+    logits, cache = prefill(params, batch, cache)
+    out = [list(p) for p in prompts]
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    tok = None
+    for i in range(max_new):
+        if temperature > 0:
+            rng, sub = jax.random.split(rng)
+            tok = jax.random.categorical(sub, logits / temperature, axis=-1)
+        else:
+            tok = jnp.argmax(logits, axis=-1)
+        tok = tok.astype(jnp.int32)
+        for b in range(B):
+            out[b].append(int(tok[b]))
+        logits, cache = decode(params, tok, jnp.asarray(T0 + i, jnp.int32), cache)
+    return [np.asarray(o, dtype=np.int32) for o in out]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b", choices=ARCH_IDS)
+    ap.add_argument("--prompt", default="the quick brown fox")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    tok = ByteTokenizer()
+    cfg = get_config(args.arch).reduced(
+        d_model=args.d_model, n_layers=args.layers,
+        vocab_size=tok.vocab_size + 1,
+    )
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    ids = tok.encode(args.prompt, add_special=True)
+    prompts = [ids for _ in range(args.batch)]
+    mesh = make_mesh((1, 1), ("data", "model"))
+
+    t0 = time.time()
+    outs = generate(model, params, prompts, max_new=args.max_new,
+                    max_len=len(ids) + args.max_new + 1,
+                    temperature=args.temperature, mesh=mesh)
+    dt = time.time() - t0
+    n_tok = args.batch * args.max_new
+    print(f"generated {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok/dt:.1f} tok/s, untrained model)")
+    print("sample:", tok.decode(outs[0][len(ids):]))
+    return outs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,177 @@
+"""Cell programs: (arch x shape) -> jittable step + abstract inputs.
+
+``build_cell(...)`` returns everything the dry-run needs for one cell:
+the step function, ShapeDtypeStruct stand-ins for every input (the
+shannon/kernels pattern — weak-type-correct, shardable, no device
+allocation), and the in/out shardings derived from the logical rules.
+
+MODEL_FLOPS convention: 6·N_active·tokens for training, 2·N_active·tokens
+for inference (prefill counts the prompt, decode counts one token per
+sequence).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeCell
+from repro.distributed import partitioning as PT
+from repro.models.config import ModelConfig
+from repro.models.zoo import Model, build_model
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.step import TrainStepBuilder
+
+# per-device microbatch target for train cells (keeps remat'd activations
+# inside 16 GB HBM for the 32B/76B archs)
+_DEFAULT_ACCUM = {"small": 4, "large": 16}
+ENC_MEMORY_LEN = 4096  # encoder length backing enc-dec decode cells
+
+
+def _accum_for(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh) -> int:
+    if cell.step != "train":
+        return 1
+    dp = 1
+    for ax in ("pod", "data"):
+        dp *= mesh.shape.get(ax, 1)
+    local = max(cell.global_batch // dp, 1)
+    if cfg.d_model >= 5120:
+        return local            # microbatch 1/device for the 32B+ archs
+    return min(max(local // 2, 1), 8)
+
+
+@dataclass
+class CellProgram:
+    arch: str
+    shape: ShapeCell
+    step_kind: str
+    fn: Callable
+    abstract_args: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    model_flops: float
+    accum: int
+
+    def jitted(self):
+        return jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+
+
+def _batch_abstract(cfg: ModelConfig, cell: ShapeCell, with_labels: bool) -> Dict:
+    B, S = cell.global_batch, cell.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    batch: Dict[str, Any] = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if with_labels:
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.frontend == "vision_stub":
+        batch["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_frontend_tokens, cfg.d_model), dt
+        )
+    if cfg.arch_kind == "encdec":
+        batch["enc_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+    return batch
+
+
+def model_flops_for(cfg: ModelConfig, cell: ShapeCell) -> float:
+    n_active = cfg.active_param_count()
+    if cell.step == "train":
+        return 6.0 * n_active * cell.global_batch * cell.seq_len
+    if cell.step == "prefill":
+        return 2.0 * n_active * cell.global_batch * cell.seq_len
+    return 2.0 * n_active * cell.global_batch  # decode: one token/sequence
+
+
+def build_cell(
+    cfg: ModelConfig,
+    cell: ShapeCell,
+    mesh: Mesh,
+    strategy: str = "tp_fsdp",
+    remat_policy: str = "full",
+    accum: Optional[int] = None,
+) -> CellProgram:
+    model = build_model(cfg)
+    accum = accum if accum is not None else _accum_for(cfg, cell, mesh)
+    builder = TrainStepBuilder(
+        model, mesh, strategy=strategy, opt=AdamWConfig(),
+        remat_policy=remat_policy, accum=accum,
+        zero2="_zero2" in strategy,
+    )
+    abstract_params, axes_tree = model.abstract()
+    mf = model_flops_for(cfg, cell)
+
+    if cell.step == "train":
+        state_abs = {
+            "params": abstract_params,
+            "opt": jax.eval_shape(adamw_init, abstract_params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        batch_abs = _batch_abstract(cfg, cell, with_labels=True)
+        state_sh = builder.state_shardings(abstract_params, axes_tree)
+        batch_sh = builder.batch_shardings(batch_abs)
+        return CellProgram(
+            arch=cfg.name, shape=cell, step_kind="train",
+            fn=builder.train_step_fn(),
+            abstract_args=(state_abs, batch_abs),
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+            model_flops=mf, accum=accum,
+        )
+
+    param_sh = builder.param_shardings(abstract_params, axes_tree)
+
+    if cell.step == "prefill":
+        batch_abs = _batch_abstract(cfg, cell, with_labels=False)
+        cache_abs = jax.eval_shape(
+            lambda: model.init_cache(cell.global_batch, cell.seq_len)
+        )
+        batch_sh = builder.batch_shardings(batch_abs)
+        cache_sh = builder.cache_shardings(cache_abs)
+        return CellProgram(
+            arch=cfg.name, shape=cell, step_kind="prefill",
+            fn=builder.prefill_step_fn(),
+            abstract_args=(abstract_params, batch_abs, cache_abs),
+            in_shardings=(param_sh, batch_sh, cache_sh),
+            out_shardings=None,
+            donate_argnums=(2,),
+            model_flops=mf, accum=1,
+        )
+
+    # decode
+    B = cell.global_batch
+    token_abs = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    cache_abs = jax.eval_shape(lambda: model.init_cache(B, cell.seq_len))
+    cache_sh = builder.cache_shardings(cache_abs)
+    token_sh = PT.sharding(mesh, builder.rules, ("batch",), (B,))
+    pos_sh = NamedSharding(mesh, P())
+    args = [abstract_params, token_abs, pos_abs, cache_abs]
+    shardings = [param_sh, token_sh, pos_sh, cache_sh]
+    if cfg.arch_kind == "encdec":
+        n_dec, hkv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+        dt = jnp.dtype(cfg.dtype)
+        mem_abs = (
+            jax.ShapeDtypeStruct((n_dec, B, hkv, ENC_MEMORY_LEN, dh), dt),
+            jax.ShapeDtypeStruct((n_dec, B, hkv, ENC_MEMORY_LEN, dh), dt),
+        )
+        args.append(mem_abs)
+        shardings.append(builder.memories_shardings(mem_abs))
+    return CellProgram(
+        arch=cfg.name, shape=cell, step_kind="decode",
+        fn=builder.decode_step_fn(),
+        abstract_args=tuple(args),
+        in_shardings=tuple(shardings),
+        out_shardings=None,
+        donate_argnums=(3,),
+        model_flops=mf, accum=1,
+    )

@@ -1,0 +1,6 @@
+"""Model zoo: every assigned architecture as a composable JAX module."""
+
+from repro.models.config import ModelConfig
+from repro.models.zoo import build_model
+
+__all__ = ["ModelConfig", "build_model"]

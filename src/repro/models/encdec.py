@@ -1,0 +1,186 @@
+"""Encoder-decoder assembly (seamless-m4t-large-v2 backbone).
+
+Bidirectional encoder over stub frame embeddings (the multimodal
+frontend provides precomputed embeddings via ``input_specs`` — paper
+scope is the transformer backbone), causal decoder with per-layer
+cross-attention.  Decode shapes lower the *decoder* step against a
+fixed encoder memory.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.param_util import leaf, normal, stack_trees
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _init_enc_block(rng, cfg: ModelConfig, dt) -> Dict:
+    ks = jax.random.split(rng, 2)
+    return {
+        "norm1": L.init_norm(cfg, dt),
+        "attn": L.init_attention(ks[0], cfg, dt),
+        "norm2": L.init_norm(cfg, dt),
+        "mlp": L.init_mlp(ks[1], cfg, dt),
+    }
+
+
+def _init_dec_block(rng, cfg: ModelConfig, dt) -> Dict:
+    ks = jax.random.split(rng, 3)
+    return {
+        "norm1": L.init_norm(cfg, dt),
+        "self": L.init_attention(ks[0], cfg, dt),
+        "norm_x": L.init_norm(cfg, dt),
+        "cross": L.init_attention(ks[1], cfg, dt, cross=True),
+        "norm2": L.init_norm(cfg, dt),
+        "mlp": L.init_mlp(ks[2], cfg, dt),
+    }
+
+
+def _apply_enc_block(p, cfg, x, positions):
+    h = L.apply_norm(p["norm1"], cfg, x)
+    y, _ = L.apply_attention(p["attn"], cfg, h, positions, causal=False)
+    x = x + y
+    h = L.apply_norm(p["norm2"], cfg, x)
+    x = x + L.apply_mlp(p["mlp"], cfg, h)
+    return constrain(x, "batch", None, "embed_act")
+
+
+def _apply_dec_block(p, cfg, x, positions, memory_kv, cache):
+    h = L.apply_norm(p["norm1"], cfg, x)
+    y, new_cache = L.apply_attention(p["self"], cfg, h, positions, cache=cache)
+    x = x + y
+    h = L.apply_norm(p["norm_x"], cfg, x)
+    x = x + L.apply_cross_attention(p["cross"], cfg, h, memory_kv)
+    h = L.apply_norm(p["norm2"], cfg, x)
+    x = x + L.apply_mlp(p["mlp"], cfg, h)
+    return constrain(x, "batch", None, "embed_act"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# whole model
+# ---------------------------------------------------------------------------
+
+
+def init_encdec(rng, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    n_enc, n_dec = cfg.n_enc_layers, cfg.n_layers
+    ks = iter(jax.random.split(rng, n_enc + n_dec + 8))
+    tree: Dict = {
+        "embed": {"table": leaf(normal(next(ks), (cfg.vocab_size, cfg.d_model), dt),
+                                "vocab", "embed")},
+        "enc_blocks": stack_trees([_init_enc_block(next(ks), cfg, dt) for _ in range(n_enc)]),
+        "enc_norm": L.init_norm(cfg, dt),
+        "dec_blocks": stack_trees([_init_dec_block(next(ks), cfg, dt) for _ in range(n_dec)]),
+        "final_norm": L.init_norm(cfg, dt),
+        "lm_head": {"w": leaf(normal(next(ks), (cfg.d_model, cfg.vocab_size), dt),
+                              "embed", "vocab")},
+    }
+    return tree
+
+
+def _remat(fn, policy):
+    if policy == "none":
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    )
+
+
+def encode(params, cfg: ModelConfig, enc_embeds: jax.Array, remat_policy="none"):
+    """enc_embeds: (B, S_enc, D) stub frontend output."""
+    x = enc_embeds.astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, "batch", None, "embed_act")
+    positions = jnp.arange(x.shape[1])
+    body = _remat(lambda c, p: (_apply_enc_block(p, cfg, c, positions), None),
+                  remat_policy)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.apply_norm(params["enc_norm"], cfg, x)
+
+
+def cross_memories(params, cfg: ModelConfig, enc_out: jax.Array):
+    """Precompute per-layer cross-attention K/V from encoder output."""
+    def per_layer(_, p):
+        return None, L.cross_attention_memory(p["cross"], cfg, enc_out)
+
+    _, kv = jax.lax.scan(per_layer, None, params["dec_blocks"])
+    return kv  # leaves have leading n_dec axis
+
+
+def decode_train(params, cfg: ModelConfig, tokens, enc_out, remat_policy="none"):
+    x = params["embed"]["table"][tokens]
+    positions = jnp.arange(x.shape[1])
+
+    def body(c, xs):
+        p = xs
+        mem = L.cross_attention_memory(p["cross"], cfg, enc_out)
+        out, _ = _apply_dec_block(p, cfg, c, positions, mem, None)
+        return out, None
+
+    x, _ = jax.lax.scan(_remat(body, remat_policy), x, params["dec_blocks"])
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    return jnp.einsum("btd,dv->btv", x, params["lm_head"]["w"])
+
+
+def encdec_loss(params, cfg: ModelConfig, batch: Dict, remat_policy="none"):
+    """batch: enc_embeds (B,S,D), tokens (B,T), labels (B,T)."""
+    enc_out = encode(params, cfg, batch["enc_embeds"], remat_policy)
+    logits = decode_train(params, cfg, batch["tokens"], enc_out, remat_policy)
+    logits = constrain(logits, "batch", None, "vocab_act").astype(jnp.float32)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lbl = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, lbl[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = ((lse - gold) * mask).sum() / denom
+    zloss = 1e-4 * ((lse * mask) ** 2).sum() / denom
+    return loss + zloss, {"ce": loss, "zloss": zloss, "tokens": denom}
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dt = jnp.dtype(cfg.dtype)
+    entries = [L.init_kv_cache(cfg, batch, max_len, dt) for _ in range(cfg.n_layers)]
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *entries)
+
+
+def encdec_prefill(params, cfg: ModelConfig, batch: Dict, cache):
+    """Encode + run decoder prompt; returns (last_logits, cache, memories)."""
+    enc_out = encode(params, cfg, batch["enc_embeds"])
+    memories = cross_memories(params, cfg, enc_out)
+    x = params["embed"]["table"][batch["tokens"]]
+    positions = jnp.arange(x.shape[1])
+
+    def body(c, xs):
+        p, mem, entry = xs
+        out, nc = _apply_dec_block(p, cfg, c, positions, mem, entry)
+        return out, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_blocks"], memories, cache))
+    x = L.apply_norm(params["final_norm"], cfg, x[:, -1:, :])
+    return jnp.einsum("btd,dv->btv", x, params["lm_head"]["w"])[:, 0], new_cache, memories
+
+
+def encdec_decode_step(params, cfg: ModelConfig, token, pos, cache, memories):
+    x = params["embed"]["table"][token][:, None, :]
+    positions = jnp.full((1,), pos, jnp.int32)
+
+    def body(c, xs):
+        p, mem, entry = xs
+        out, nc = _apply_dec_block(p, cfg, c, positions, mem, entry)
+        return out, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_blocks"], memories, cache))
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    return jnp.einsum("btd,dv->btv", x, params["lm_head"]["w"])[:, 0], new_cache

@@ -1,0 +1,91 @@
+"""Mixture-of-Experts FFN (olmoe-1b-7b, granite-moe-1b-a400m).
+
+GShard/Switch-style capacity-based top-k routing with einsum dispatch —
+the TPU-native formulation: dispatch/combine are dense one-hot einsums
+(MXU work, no scatter), expert compute is a batched GEMM with the expert
+axis shardable over the mesh ("expert parallelism"); XLA lowers the
+sharded dispatch to all-to-alls.  Compute scales with ``top_k`` and the
+capacity factor, not with ``n_experts`` — HLO FLOPs stay proportional to
+*active* parameters, which the §Roofline MODEL_FLOPS/HLO_FLOPs ratio
+checks.
+
+Tokens overflowing an expert's capacity are dropped (standard GShard
+behaviour); the auxiliary load-balancing loss keeps overflow rare.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+from repro.models.config import ModelConfig
+from repro.models.param_util import leaf, normal
+
+
+def init_moe(rng, cfg: ModelConfig, dtype) -> Dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(rng, 4)
+    return {
+        "router": leaf(normal(ks[0], (d, e), jnp.float32), "embed", "experts"),
+        "wi": leaf(normal(ks[1], (e, d, f), dtype), "experts", "embed", "mlp"),
+        "wg": leaf(normal(ks[2], (e, d, f), dtype), "experts", "embed", "mlp"),
+        "wo": leaf(normal(ks[3], (e, f, d), dtype), "experts", "mlp", "embed"),
+    }
+
+
+def apply_moe(p: Dict, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, T, D) -> (out, aux_loss)."""
+    B0, T0, D = x.shape
+    if cfg.moe_group is not None and T0 > cfg.moe_group and T0 % cfg.moe_group == 0:
+        # re-group tokens: dispatch cost drops from O(T^2) to O(T*group)
+        g = cfg.moe_group
+        x = x.reshape(B0 * (T0 // g), g, D)
+    B, T, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    capacity = max(1, int(cfg.capacity_factor * K * T / E))
+
+    logits = jnp.einsum("btd,de->bte", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # -- top-k choice per token ------------------------------------------------
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)          # (B,T,K)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # -- capacity assignment (GShard): position of each (token, choice)
+    # within its expert's buffer, computed with a cumulative sum over the
+    # flattened token axis, independently per batch group.
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)  # (B,T,K,E)
+    # priority: choice k=0 of every token first, then k=1, ... (GShard)
+    flat = onehot.transpose(0, 2, 1, 3).reshape(B, K * T, E)   # (B, K*T, E)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat            # (B, K*T, E)
+    pos_in_expert = (pos_in_expert * flat).sum(-1)             # (B, K*T)
+    fits = pos_in_expert < capacity
+    flat = flat * fits[..., None]
+    pos_oh = jax.nn.one_hot(pos_in_expert, capacity, dtype=jnp.float32)  # (B,K*T,C)
+    dispatch = jnp.einsum("bse,bsc->bsec", flat, pos_oh)       # (B,K*T,E,C)
+    dispatch = dispatch.reshape(B, K, T, E, capacity).transpose(0, 2, 1, 3, 4)
+    dispatch = dispatch.sum(2)                                 # (B,T,E,C)
+    combine = dispatch * jnp.einsum(
+        "btke,btk->bte", onehot, gate_vals
+    )[..., None]                                               # (B,T,E,C)
+
+    # -- expert compute ---------------------------------------------------------
+    xin = jnp.einsum("btec,btd->becd", dispatch.astype(x.dtype), x)   # (B,E,C,D)
+    xin = constrain(xin, "batch", "experts_act", None, None)
+    h = jnp.einsum("becd,edf->becf", xin, p["wi"])
+    g = jax.nn.silu(jnp.einsum("becd,edf->becf", xin, p["wg"]))
+    h = h * g
+    eout = jnp.einsum("becf,efd->becd", h, p["wo"])             # (B,E,C,D)
+    eout = constrain(eout, "batch", "experts_act", None, None)
+    out = jnp.einsum("btec,becd->btd", combine.astype(x.dtype), eout)
+
+    # -- auxiliary load-balance loss (Switch eq. 4) -------------------------------
+    me = probs.mean(axis=(0, 1))                                # (E,)
+    ce = onehot.sum(2).mean(axis=(0, 1))                        # fraction routed
+    aux = E * jnp.sum(me * ce / K)
+    if out.shape[0] != B0:
+        out = out.reshape(B0, T0, D)
+    return out, aux.astype(jnp.float32)

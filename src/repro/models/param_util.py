@@ -1,0 +1,57 @@
+"""Parameter-tree utilities.
+
+Init functions build trees whose leaves are ``(array, logical_axes)``
+pairs; :func:`split_tree` separates them into a value tree (what the
+optimizer sees) and an axes tree (what the partitioner sees).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def leaf(array: jax.Array, *axes) -> Tuple[jax.Array, Tuple]:
+    assert array.ndim == len(axes), (array.shape, axes)
+    return (array, tuple(axes))
+
+
+def is_leaf(x) -> bool:
+    return isinstance(x, tuple) and len(x) == 2 and isinstance(x[1], tuple)
+
+
+def split_tree(tree) -> Tuple[Any, Any]:
+    """((array, axes) leaves) -> (params, axes) twin trees."""
+    params = jax.tree.map(lambda l: l[0], tree, is_leaf=is_leaf)
+    axes = jax.tree.map(lambda l: l[1], tree, is_leaf=is_leaf)
+    return params, axes
+
+
+def normal(rng, shape, dtype, scale: float = 0.02):
+    return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)
+
+
+def zeros(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def stack_trees(trees):
+    """Stack a list of identically-structured param trees along axis 0
+    (layer-scan stacking); logical axes gain a leading "layers"."""
+    if len(trees) == 1:
+        stacked = jax.tree.map(
+            lambda l: (l[0][None], ("layers",) + l[1]), trees[0], is_leaf=is_leaf
+        )
+        return stacked
+    out = jax.tree.map(
+        lambda *ls: (jnp.stack([l[0] for l in ls]), ("layers",) + ls[0][1]),
+        *trees,
+        is_leaf=is_leaf,
+    )
+    return out

@@ -1,0 +1,295 @@
+"""Recurrent token mixers: RG-LRU (recurrentgemma), mLSTM + sLSTM (xLSTM).
+
+All three are pure functions with an explicit state dict, so the same
+code serves training (scan over the full sequence), prefill (same, but
+returning the final state) and decode (T=1 step with carried state) —
+which is what makes the ``long_500k`` cells O(1)-state for these
+families.
+
+TPU adaptation: the RG-LRU diagonal recurrence lowers to
+``kernels.ops.linear_scan`` (chunked-sequential Pallas kernel on TPU,
+associative scan on CPU).  The mLSTM matrix memory uses the chunked
+GLA-style formulation — per-chunk parallel MXU work + a tiny cross-chunk
+state scan — rather than a per-token loop.  The sLSTM's hidden-to-gate
+recurrence is inherently sequential and stays a ``lax.scan``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.config import ModelConfig
+from repro.models.param_util import leaf, normal, ones, zeros
+
+# ---------------------------------------------------------------------------
+# temporal conv (shared by RG-LRU and mLSTM blocks)
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: Optional[jax.Array]):
+    """Depthwise causal conv. x: (B,T,D); w: (W,D); state: (B,W-1,D)."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)            # (B, T+W-1, D)
+    out = sum(xx[:, i : i + x.shape[1], :] * w[i] for i in range(W))
+    new_state = xx[:, -(W - 1):, :] if W > 1 else state
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (Griffin / recurrentgemma)
+# ---------------------------------------------------------------------------
+
+
+def init_rglru(rng, cfg: ModelConfig, dtype) -> Dict:
+    d, r, w = cfg.d_model, cfg.rnn_width, cfg.conv_width
+    ks = jax.random.split(rng, 7)
+    return {
+        "wx": leaf(normal(ks[0], (d, r), dtype), "embed", "rnn"),
+        "wy": leaf(normal(ks[1], (d, r), dtype), "embed", "rnn"),
+        "conv": leaf(normal(ks[2], (w, r), dtype, scale=0.1), "conv", "rnn"),
+        "w_a": leaf(normal(ks[3], (r, r), dtype), "rnn", "rnn_gate"),
+        "w_i": leaf(normal(ks[4], (r, r), dtype), "rnn", "rnn_gate"),
+        # Λ init so that a = exp(-8 softplus(Λ) r) starts near 0.9..0.999
+        "lam": leaf((jnp.log(jnp.expm1(jnp.linspace(0.001, 0.1, r))) / 1.0)
+                    .astype(jnp.float32), "rnn"),
+        "wo": leaf(normal(ks[5], (r, d), dtype), "rnn", "embed"),
+    }
+
+
+def apply_rglru(
+    p: Dict, cfg: ModelConfig, x: jax.Array, state: Optional[Dict] = None
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B,T,D) -> (y, new_state). state={"h": (B,R), "conv": (B,W-1,R)}."""
+    xb = jnp.einsum("btd,dr->btr", x, p["wx"])
+    yb = jnp.einsum("btd,dr->btr", x, p["wy"])          # gate branch
+    conv_state = state["conv"] if state is not None else None
+    xb, new_conv = _causal_conv(xb, p["conv"], conv_state)
+
+    xf = xb.astype(jnp.float32)
+    r_gate = jax.nn.sigmoid(jnp.einsum("btr,rg->btg", xf, p["w_a"].astype(jnp.float32)))
+    i_gate = jax.nn.sigmoid(jnp.einsum("btr,rg->btg", xf, p["w_i"].astype(jnp.float32)))
+    log_a = -8.0 * jax.nn.softplus(p["lam"]) * r_gate   # (B,T,R)
+    a = jnp.exp(log_a)
+    gated_x = xf * i_gate
+    # input normalization: sqrt(1 - a^2) (Griffin eq. 4)
+    scaled_x = gated_x * jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+
+    h0 = state["h"].astype(jnp.float32) if state is not None else None
+    if x.shape[1] == 1 and h0 is not None:
+        h = (a[:, 0] * h0 + scaled_x[:, 0])[:, None]    # decode: one step
+    else:
+        if h0 is not None:
+            scaled_x = scaled_x.at[:, 0].add(a[:, 0] * h0)
+        h = kops.linear_scan(a, scaled_x)
+    new_state = {"h": h[:, -1], "conv": new_conv}
+    y = h.astype(x.dtype) * jax.nn.gelu(yb)
+    return jnp.einsum("btr,rd->btd", y, p["wo"]), new_state
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    r, w = cfg.rnn_width, cfg.conv_width
+    return {"h": zeros((batch, r), jnp.float32), "conv": zeros((batch, w - 1, r), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM): matrix memory, chunked-parallel
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(rng, cfg: ModelConfig, dtype) -> Dict:
+    d, r, h = cfg.d_model, cfg.rnn_width, cfg.n_heads
+    dh = r // h
+    ks = jax.random.split(rng, 9)
+    return {
+        "w_up": leaf(normal(ks[0], (d, 2 * r), dtype), "embed", "rnn_up"),
+        "conv": leaf(normal(ks[1], (cfg.conv_width, r), dtype, scale=0.1), "conv", "rnn"),
+        "wq": leaf(normal(ks[2], (r, h, dh), dtype), "rnn", "q_heads", "head"),
+        "wk": leaf(normal(ks[3], (r, h, dh), dtype), "rnn", "q_heads", "head"),
+        "wv": leaf(normal(ks[4], (r, h, dh), dtype), "rnn", "q_heads", "head"),
+        "w_if": leaf(normal(ks[5], (r, 2 * h), jnp.float32), "rnn", "gates"),
+        "b_if": leaf(jnp.concatenate([zeros((h,), jnp.float32),
+                                      3.0 * ones((h,), jnp.float32)]), "gates"),
+        "o_norm": leaf(ones((h, dh), jnp.float32), "q_heads", "head"),
+        "w_down": leaf(normal(ks[6], (r, d), dtype), "rnn", "embed"),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, log_f, log_i, C0, n0, m0, chunk: int):
+    """Chunked mLSTM. q,k,v: (B,H,T,Dh); log_f/log_i: (B,H,T).
+
+    Stabilized exponential gating (xLSTM eq. 19-27) evaluated chunkwise:
+    within a chunk all pairwise decay factors are formed as
+    ``exp(F_t - F_s + i_s - m)`` MXU-style; across chunks the matrix
+    state C (B,H,Dh,Dh) carries.
+    """
+    B, H, T, Dh = q.shape
+    pad = (-T) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        log_f = jnp.pad(log_f, ((0, 0), (0, 0), (0, pad)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, 0), (0, pad)), constant_values=-1e30)
+    Tp = q.shape[2]
+    nc = Tp // chunk
+    qc = q.reshape(B, H, nc, chunk, Dh).transpose(2, 0, 1, 3, 4)
+    kc = k.reshape(B, H, nc, chunk, Dh).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, H, nc, chunk, Dh).transpose(2, 0, 1, 3, 4)
+    fc = log_f.reshape(B, H, nc, chunk).transpose(2, 0, 1, 3)
+    ic = log_i.reshape(B, H, nc, chunk).transpose(2, 0, 1, 3)
+
+    def step(carry, inp):
+        C, n, m = carry                      # (B,H,Dh,Dh), (B,H,Dh), (B,H)
+        qj, kj, vj, fj, ij = inp
+        F = jnp.cumsum(fj, axis=-1)          # (B,H,c) cumulative log-forget
+        Ftot = F[..., -1]
+        # stabilizer for this chunk
+        a_log = F - fj + ij                  # contribution position s: decay to end handled below
+        # intra-chunk pair decay: D[t,s] = F_t - F_s + i_s  (s<=t)
+        Dmat = F[..., :, None] - F[..., None, :] + ij[..., None, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        Dmat = jnp.where(tri, Dmat, -jnp.inf)
+        m_intra = jnp.max(Dmat, axis=-1)                       # (B,H,c)
+        m_inter = F + m[..., None]                             # carry path
+        m_new_t = jnp.maximum(m_intra, m_inter)                # (B,H,c)
+        # intra contribution
+        w = jnp.exp(Dmat - m_new_t[..., None])                 # (B,H,c,c)
+        s = jnp.einsum("bhtd,bhsd->bhts", qj, kj)              # scores
+        h_intra = jnp.einsum("bhts,bhsd->bhtd", w * s, vj)
+        l_intra = jnp.einsum("bhts,bhsd->bhtd", w, kj)         # for normalizer
+        n_intra = jnp.einsum("bhtd,bhtd->bht", qj, l_intra)
+        # inter contribution (state from previous chunks)
+        scale = jnp.exp(m_inter - m_new_t)                     # (B,H,c)
+        h_inter = jnp.einsum("bhtd,bhde->bhte", qj, C) * scale[..., None]
+        n_inter = jnp.einsum("bhtd,bhd->bht", qj, n) * scale
+        denom = jnp.maximum(jnp.abs(n_intra + n_inter), jnp.exp(-m_new_t))
+        h = (h_intra + h_inter) / denom[..., None]
+        # -- state update to end of chunk --
+        m_end = jnp.maximum(Ftot + m, jnp.max(a_log + (Ftot[..., None] - F), axis=-1))
+        # decay of each in-chunk position to chunk end:
+        dec = jnp.exp(ij + Ftot[..., None] - F - m_end[..., None])  # (B,H,c)
+        C_new = C * jnp.exp(Ftot + m - m_end)[..., None, None] + jnp.einsum(
+            "bhs,bhsd,bhse->bhde", dec, kj, vj
+        )
+        n_new = n * jnp.exp(Ftot + m - m_end)[..., None] + jnp.einsum(
+            "bhs,bhsd->bhd", dec, kj
+        )
+        return (C_new, n_new, m_end), h
+
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), (qc, kc, vc, fc, ic))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, Tp, Dh)[:, :, :T]
+    return h, (C, n, m)
+
+
+def apply_mlstm(
+    p: Dict, cfg: ModelConfig, x: jax.Array, state: Optional[Dict] = None,
+    chunk: int = 256,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    B, T, _ = x.shape
+    r, H = cfg.rnn_width, cfg.n_heads
+    dh = r // H
+    up = jnp.einsum("btd,du->btu", x, p["w_up"])
+    xi, z = jnp.split(up, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xi, new_conv = _causal_conv(xi, p["conv"], conv_state)
+    xi_act = jax.nn.silu(xi)
+    q = jnp.einsum("btr,rhk->bhtk", xi_act, p["wq"]) * (dh ** -0.5)
+    k = jnp.einsum("btr,rhk->bhtk", xi_act, p["wk"])
+    v = jnp.einsum("btr,rhk->bhtk", xi_act, p["wv"])
+    gates = jnp.einsum("btr,rg->btg", xi.astype(jnp.float32), p["w_if"]) + p["b_if"]
+    log_i, log_f = jnp.split(gates, 2, axis=-1)            # (B,T,H)
+    log_f = jax.nn.log_sigmoid(log_f).transpose(0, 2, 1)   # (B,H,T)
+    log_i = log_i.transpose(0, 2, 1)                       # exp input gate (log-space)
+
+    if state is not None:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+    else:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    h, (C, n, m) = _mlstm_chunk_scan(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        log_f, log_i, C0, n0, m0, chunk=min(chunk, max(T, 1)),
+    )
+    h = h * p["o_norm"][None, :, None, :]
+    h = h.transpose(0, 2, 1, 3).reshape(B, T, r).astype(x.dtype)
+    y = h * jax.nn.silu(z)
+    new_state = {"C": C, "n": n, "m": m, "conv": new_conv}
+    return jnp.einsum("btr,rd->btd", y, p["w_down"]), new_state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    r, H, w = cfg.rnn_width, cfg.n_heads, cfg.conv_width
+    dh = r // H
+    return {
+        "C": zeros((batch, H, dh, dh), jnp.float32),
+        "n": zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+        "conv": zeros((batch, w - 1, r), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM): scalar memory, sequential scan
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(rng, cfg: ModelConfig, dtype) -> Dict:
+    d, r = cfg.d_model, cfg.rnn_width
+    ks = jax.random.split(rng, 4)
+    return {
+        "w_in": leaf(normal(ks[0], (d, 4 * r), dtype), "embed", "rnn_gates"),
+        "r_rec": leaf(normal(ks[1], (r, 4 * r), dtype, scale=0.01), "rnn", "rnn_gates"),
+        "b": leaf(zeros((4 * r,), jnp.float32), "rnn_gates"),
+        "w_out": leaf(normal(ks[2], (r, d), dtype), "rnn", "embed"),
+    }
+
+
+def apply_slstm(
+    p: Dict, cfg: ModelConfig, x: jax.Array, state: Optional[Dict] = None
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Sequential sLSTM with exponential gating + stabilizer (xLSTM §2.1)."""
+    B, T, _ = x.shape
+    r = cfg.rnn_width
+    pre = jnp.einsum("btd,dg->btg", x, p["w_in"]).astype(jnp.float32)
+    if state is None:
+        state = init_slstm_state(cfg, B, x.dtype)
+    c0, n0, h0, m0 = (state[k] for k in ("c", "n", "h", "m"))
+    rrec = p["r_rec"].astype(jnp.float32)
+
+    def step(carry, pre_t):
+        c, n, h, m = carry
+        g = pre_t + h @ rrec + p["b"]
+        zi, zf, zz, zo = jnp.split(g, 4, axis=-1)
+        log_i = zi
+        log_f = jax.nn.log_sigmoid(zf)
+        m_new = jnp.maximum(log_f + m, log_i)
+        i = jnp.exp(log_i - m_new)
+        f = jnp.exp(log_f + m - m_new)
+        z = jnp.tanh(zz)
+        o = jax.nn.sigmoid(zo)
+        c_new = f * c + i * z
+        n_new = f * n + i
+        h_new = o * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    (c, n, h, m), hs = jax.lax.scan(step, (c0, n0, h0, m0), pre.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)
+    new_state = {"c": c, "n": n, "h": h, "m": m}
+    return jnp.einsum("btr,rd->btd", y, p["w_out"]), new_state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    r = cfg.rnn_width
+    return {
+        "c": zeros((batch, r), jnp.float32),
+        "n": zeros((batch, r), jnp.float32),
+        "h": zeros((batch, r), jnp.float32),
+        "m": jnp.full((batch, r), -1e30, jnp.float32),
+    }

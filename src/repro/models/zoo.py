@@ -1,0 +1,86 @@
+"""Model facade: uniform API over decoder-only and encoder-decoder archs.
+
+``build_model(cfg)`` returns a :class:`Model` whose methods are pure
+functions of (params, batch) — the train/serve steps, the dry-run and
+the smoke tests all drive models exclusively through this interface.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as ED
+from repro.models import lm as LM
+from repro.models.config import ModelConfig
+from repro.models.param_util import split_tree
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable          # rng -> (params, axes)
+    loss_fn: Callable       # (params, batch, remat_policy) -> (loss, metrics)
+    init_cache: Callable    # (batch, max_len) -> cache
+    prefill: Callable       # (params, batch, cache) -> (logits, cache[, extras])
+    decode_step: Callable   # (params, token, pos, cache[, extras]) -> (logits, cache)
+
+    def abstract(self, rng=None) -> Tuple[Any, Any]:
+        """(abstract_params, axes) without materializing any array.
+
+        The axes tree is static Python data, captured via a side channel
+        while ``eval_shape`` traces the init (no allocation happens).
+        """
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        captured: Dict[str, Any] = {}
+
+        def traced(r):
+            params, axes = self.init(r)
+            captured["axes"] = axes
+            return params
+
+        abstract_params = jax.eval_shape(traced, rng)
+        return abstract_params, captured["axes"]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.arch_kind == "decoder":
+        def init(rng):
+            return split_tree(LM.init_lm(rng, cfg))
+
+        def loss_fn(params, batch, remat_policy="none"):
+            return LM.lm_loss(params, cfg, batch, remat_policy)
+
+        def init_cache(batch, max_len):
+            return LM.init_lm_cache(cfg, batch, max_len)
+
+        def prefill(params, batch, cache):
+            return LM.lm_prefill(params, cfg, batch, cache)
+
+        def decode_step(params, token, pos, cache):
+            return LM.lm_decode_step(params, cfg, token, pos, cache)
+
+    elif cfg.arch_kind == "encdec":
+        def init(rng):
+            return split_tree(ED.init_encdec(rng, cfg))
+
+        def loss_fn(params, batch, remat_policy="none"):
+            return ED.encdec_loss(params, cfg, batch, remat_policy)
+
+        def init_cache(batch, max_len):
+            return ED.init_encdec_cache(cfg, batch, max_len)
+
+        def prefill(params, batch, cache):
+            return ED.encdec_prefill(params, cfg, batch, cache)
+
+        def decode_step(params, token, pos, cache, memories=None):
+            return ED.encdec_decode_step(params, cfg, token, pos, cache, memories)
+
+    else:
+        raise ValueError(cfg.arch_kind)
+
+    return Model(cfg=cfg, init=init, loss_fn=loss_fn, init_cache=init_cache,
+                 prefill=prefill, decode_step=decode_step)

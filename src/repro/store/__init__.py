@@ -1,0 +1,6 @@
+"""Physical page stores backing data providers."""
+
+from repro.store.memory import MemoryPageStore
+from repro.store.file import FilePageStore
+
+__all__ = ["MemoryPageStore", "FilePageStore"]

@@ -1,0 +1,12 @@
+"""Training: optimizer, train step, schedules."""
+
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, opt_state_axes
+from repro.train.step import TrainStepBuilder
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "opt_state_axes",
+    "TrainStepBuilder",
+]

@@ -1,0 +1,22 @@
+import os
+import sys
+
+# tests must see exactly ONE device (the dry-run sets its own XLA_FLAGS
+# in a separate process); make sure nothing leaks in from the caller.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest
+
+
+@pytest.fixture
+def service():
+    from repro.core import BlobSeerService
+
+    return BlobSeerService(n_providers=8, n_meta_shards=4)
+
+
+@pytest.fixture
+def client(service):
+    return service.client()

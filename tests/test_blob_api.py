@@ -1,0 +1,138 @@
+"""Blob primitive semantics (paper §2.1), incl. unaligned + branch."""
+
+import pytest
+
+from repro.core import BlobSeerService, ReadError, WriteBeyondEnd
+from repro.core.version_manager import VersionUnpublished
+
+
+def test_create_empty_v0(client):
+    bid = client.create(psize=16)
+    assert client.get_recent(bid) == 0
+    assert client.get_size(bid, 0) == 0
+    assert client.read(bid, 0, 0, 0) == b""
+    with pytest.raises(ReadError):
+        client.read(bid, 0, 0, 1)
+
+
+def test_write_read_roundtrip(client):
+    bid = client.create(psize=16)
+    v = client.write(bid, b"A" * 64, 0)
+    assert v == 1
+    assert client.read(bid, v, 0, 64) == b"A" * 64
+    assert client.read(bid, v, 5, 20) == b"A" * 20
+
+
+def test_versions_immutable(client):
+    bid = client.create(psize=16)
+    v1 = client.write(bid, b"A" * 48, 0)
+    v2 = client.write(bid, b"B" * 16, 16)
+    assert client.read(bid, v1, 0, 48) == b"A" * 48
+    assert client.read(bid, v2, 0, 48) == b"A" * 16 + b"B" * 16 + b"A" * 16
+
+
+def test_append_extends(client):
+    bid = client.create(psize=16)
+    client.write(bid, b"x" * 10, 0)       # unaligned size
+    v2 = client.append(bid, b"y" * 30)
+    assert client.get_size(bid, v2) == 40
+    assert client.read(bid, v2, 0, 40) == b"x" * 10 + b"y" * 30
+
+
+def test_unaligned_write_merges_boundaries(client):
+    bid = client.create(psize=16)
+    client.write(bid, bytes(range(64)), 0)
+    v = client.write(bid, b"\xff" * 5, 13)  # crosses page 0/1 boundary
+    got = client.read(bid, v, 0, 64)
+    exp = bytearray(range(64))
+    exp[13:18] = b"\xff" * 5
+    assert got == bytes(exp)
+
+
+def test_write_beyond_end_fails(client):
+    bid = client.create(psize=16)
+    client.write(bid, b"a" * 8, 0)
+    with pytest.raises(WriteBeyondEnd):
+        client.write(bid, b"b" * 4, 100)
+
+
+def test_write_at_exact_end_is_append(client):
+    bid = client.create(psize=16)
+    client.write(bid, b"a" * 8, 0)
+    v = client.write(bid, b"b" * 8, 8)
+    assert client.read(bid, v, 0, 16) == b"a" * 8 + b"b" * 8
+
+
+def test_read_unpublished_fails(client):
+    bid = client.create(psize=16)
+    client.write(bid, b"a" * 8, 0)
+    with pytest.raises(ReadError):
+        client.read(bid, 2, 0, 4)
+    with pytest.raises(VersionUnpublished):
+        client.get_size(bid, 2)
+
+
+def test_read_oob_fails(client):
+    bid = client.create(psize=16)
+    v = client.write(bid, b"a" * 8, 0)
+    with pytest.raises(ReadError):
+        client.read(bid, v, 4, 8)
+
+
+def test_get_recent_monotone(client):
+    bid = client.create(psize=16)
+    seen = [client.get_recent(bid)]
+    for i in range(5):
+        client.append(bid, b"z" * 10)
+        seen.append(client.get_recent(bid))
+    assert seen == sorted(seen)
+
+
+def test_sync_read_your_writes(client):
+    bid = client.create(psize=16)
+    v = client.append(bid, b"q" * 40)
+    client.sync(bid, v, timeout=5)
+    assert client.read(bid, v, 0, 40) == b"q" * 40
+
+
+def test_branch_semantics(client):
+    bid = client.create(psize=16)
+    v1 = client.write(bid, b"A" * 32, 0)
+    v2 = client.append(bid, b"B" * 16)
+    b2 = client.branch(bid, v1)
+    # branch shares history <= v1
+    assert client.get_size(b2, v1) == 32
+    assert client.read(b2, v1, 0, 32) == b"A" * 32
+    # divergence
+    vb = client.append(b2, b"C" * 8)
+    assert vb == v1 + 1
+    assert client.read(b2, vb, 0, 40) == b"A" * 32 + b"C" * 8
+    assert client.read(bid, v2, 0, 48) == b"A" * 32 + b"B" * 16
+
+
+def test_branch_of_branch(client):
+    bid = client.create(psize=16)
+    client.write(bid, b"1" * 16, 0)
+    b2 = client.branch(bid, 1)
+    client.append(b2, b"2" * 16)
+    b3 = client.branch(b2, 2)
+    v = client.append(b3, b"3" * 16)
+    assert client.read(b3, v, 0, 48) == b"1" * 16 + b"2" * 16 + b"3" * 16
+
+
+def test_branch_unpublished_fails(client):
+    bid = client.create(psize=16)
+    client.write(bid, b"a" * 8, 0)
+    with pytest.raises(VersionUnpublished):
+        client.branch(bid, 7)
+
+
+def test_space_efficiency_cow(service):
+    """§4.3: unchanged pages are shared between snapshot versions."""
+    c = service.client()
+    bid = c.create(psize=16)
+    c.write(bid, b"0" * 1024, 0)          # 64 pages
+    pages_after_v1 = service.storage_report()["pages"]
+    c.write(bid, b"1" * 16, 512)          # 1 page
+    pages_after_v2 = service.storage_report()["pages"]
+    assert pages_after_v2 - pages_after_v1 == 1

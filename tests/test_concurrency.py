@@ -1,0 +1,132 @@
+"""Concurrency: total ordering, atomicity, lock-free data-path claims."""
+
+import random
+import threading
+
+import pytest
+
+from repro.core import BlobSeerService
+
+
+def test_concurrent_appends_total_order_and_atomicity():
+    svc = BlobSeerService(n_providers=8, n_meta_shards=4)
+    c0 = svc.client("main")
+    bid = c0.create(psize=32)
+    N_T, N_A = 6, 8
+    results = {}
+    errs = []
+
+    def worker(tid):
+        try:
+            c = svc.client(f"w{tid}")
+            for i in range(N_A):
+                payload = bytes([tid + 1]) * random.Random(tid * 100 + i).randint(5, 90)
+                v = c.append(bid, payload)
+                results[(tid, i)] = (v, payload)
+        except Exception as e:  # pragma: no cover
+            errs.append(e)
+
+    ts = [threading.Thread(target=worker, args=(t,)) for t in range(N_T)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert not errs
+    versions = sorted(v for v, _ in results.values())
+    assert versions == list(range(1, N_T * N_A + 1))
+    c0.sync(bid, versions[-1], timeout=10)
+    offset = 0
+    for v, payload in sorted(results.values()):
+        assert c0.read(bid, v, offset, len(payload)) == payload
+        offset += len(payload)
+    assert c0.get_size(bid, versions[-1]) == offset
+
+
+def test_concurrent_writers_and_readers():
+    svc = BlobSeerService(n_providers=8, n_meta_shards=4)
+    c = svc.client()
+    bid = c.create(psize=16)
+    c.write(bid, b"\x00" * 512, 0)
+    stop = threading.Event()
+    errs = []
+
+    def writer(tid):
+        try:
+            cl = svc.client(f"w{tid}")
+            for i in range(10):
+                off = random.Random(tid * 31 + i).randint(0, 400)
+                cl.write(bid, bytes([tid + 1]) * 30, off)
+        except Exception as e:
+            errs.append(e)
+
+    def reader():
+        try:
+            cl = svc.client("r")
+            while not stop.is_set():
+                v = cl.get_recent(bid)
+                if v:
+                    data = cl.read(bid, v, 0, cl.get_size(bid, v))
+                    assert len(data) == 512
+        except Exception as e:
+            errs.append(e)
+
+    ws = [threading.Thread(target=writer, args=(t,)) for t in range(4)]
+    r = threading.Thread(target=reader)
+    r.start()
+    [w.start() for w in ws]
+    [w.join() for w in ws]
+    stop.set()
+    r.join()
+    assert not errs
+    assert c.get_recent(bid) == 1 + 4 * 10
+
+
+def test_reader_never_sees_partial_update():
+    """Atomicity: every published snapshot is internally consistent —
+    an update's bytes appear all-or-nothing."""
+    svc = BlobSeerService(n_providers=4, n_meta_shards=2)
+    c = svc.client()
+    bid = c.create(psize=8)
+    c.write(bid, b"\x00" * 256, 0)
+    errs = []
+    stop = threading.Event()
+
+    def writer():
+        cl = svc.client("w")
+        for i in range(1, 30):
+            cl.write(bid, bytes([i]) * 64, 64)  # same range, 8 pages
+
+    def reader():
+        cl = svc.client("r")
+        while not stop.is_set():
+            v = cl.get_recent(bid)
+            data = cl.read(bid, v, 64, 64)
+            if len(set(data)) != 1:
+                errs.append(f"torn read at v{v}: {set(data)}")
+
+    r = threading.Thread(target=reader)
+    w = threading.Thread(target=writer)
+    r.start()
+    w.start()
+    w.join()
+    stop.set()
+    r.join()
+    assert not errs, errs[:3]
+
+
+def test_sync_blocks_until_published():
+    svc = BlobSeerService(n_providers=2, n_meta_shards=2)
+    c = svc.client()
+    bid = c.create(psize=16)
+    done = []
+
+    def late_writer():
+        cw = svc.client("late")
+        cw.append(bid, b"x" * 64)
+        done.append(True)
+
+    t = threading.Thread(target=late_writer)
+    t.start()
+    c.sync(bid, 1, timeout=10)
+    t.join()
+    assert done and c.get_recent(bid) >= 1
+    with pytest.raises(TimeoutError):
+        c.sync(bid, 99, timeout=0.05)

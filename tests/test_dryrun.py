@@ -1,0 +1,61 @@
+"""Dry-run machinery: runs in a subprocess so the 512-device XLA flag
+never leaks into this test process (which must keep seeing 1 device)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def test_this_process_sees_one_device():
+    assert len(jax.devices()) == 1
+
+
+@pytest.mark.slow
+def test_dryrun_cell_subprocess(tmp_path):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "granite-moe-1b-a400m", "--shape", "decode_32k",
+         "--mesh", "single", "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=900, cwd=ROOT,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.load(open(tmp_path / "granite-moe-1b-a400m_decode_32k_single_tp_serve.json"))
+    assert rec["status"] == "ok"
+    assert rec["roofline"]["n_chips"] == 256
+    assert rec["roofline"]["step_time_s"] > 0
+
+
+def test_hlo_collective_parser():
+    from repro.launch.hlo import collective_stats
+    txt = """
+  %ag = bf16[16,1024]{1,0} all-gather(bf16[1,1024]{1,0} %x), replica_groups={}
+  %ar = f32[512]{0} all-reduce(f32[512]{0} %y), to_apply=%add
+  %cp.1 = (f32[8,8]{1,0}, f32[8,8]{1,0}) collective-permute(f32[8,8]{1,0} %z)
+  %ard = f32[512]{0} all-reduce-done(f32[512]{0} %ar)
+  %unrelated = f32[2,2]{1,0} add(f32[2,2]{1,0} %a, f32[2,2]{1,0} %b)
+"""
+    st = collective_stats(txt)
+    assert st.count_by_op["all-gather"] == 1
+    assert st.bytes_by_op["all-gather"] == 16 * 1024 * 2
+    assert st.count_by_op["all-reduce"] == 1
+    assert st.bytes_by_op["collective-permute"] == 2 * 8 * 8 * 4
+    assert st.total_count == 3
+
+
+def test_roofline_terms():
+    from repro.launch.hlo import Roofline, PEAK_FLOPS, HBM_BW, ICI_BW
+    r = Roofline(flops=PEAK_FLOPS, hbm_bytes=HBM_BW / 2, collective_bytes=ICI_BW / 4,
+                 n_chips=256, model_flops=PEAK_FLOPS * 256 * 0.5)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(0.5)
+    assert r.collective_s == pytest.approx(0.25)
+    assert r.bottleneck == "compute"
+    assert r.mfu_bound == pytest.approx(0.5)

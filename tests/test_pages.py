@@ -1,0 +1,67 @@
+"""Unit + property tests for the page/tree-shape algebra."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pages as P
+
+
+def test_next_pow2():
+    assert [P.next_pow2(x) for x in [0, 1, 2, 3, 4, 5, 8, 9]] == [1, 1, 2, 4, 4, 8, 8, 16]
+
+
+def test_pages_spanned():
+    assert P.pages_spanned(0, 64, 16) == (0, 4)
+    assert P.pages_spanned(10, 10, 16) == (0, 2)
+    assert P.pages_spanned(16, 16, 16) == (1, 2)
+    assert P.pages_spanned(0, 0, 16) == (0, 0)
+
+
+def test_root_pages_for():
+    assert P.root_pages_for(0, 16) == 1
+    assert P.root_pages_for(1, 16) == 1
+    assert P.root_pages_for(17, 16) == 2
+    assert P.root_pages_for(65, 16) == 8
+
+
+def test_node_parent_children_roundtrip():
+    for off, size in [(0, 1), (1, 1), (2, 2), (4, 4), (6, 2)]:
+        poff, psize, is_left = P.node_parent(off, size)
+        (lo, ls), (ro, rs) = P.node_children(poff, psize)
+        child = (lo, ls) if is_left else (ro, rs)
+        assert child == (off, size)
+
+
+@given(
+    p0=st.integers(0, 200),
+    length=st.integers(1, 100),
+    root_exp=st.integers(0, 9),
+)
+@settings(max_examples=200, deadline=None)
+def test_created_nodes_are_exactly_intersecting(p0, length, root_exp):
+    root = 1 << root_exp
+    p1 = p0 + length
+    if p1 > root:
+        p0, p1 = p0 % root, min(p0 % root + length, root)
+        if p0 >= p1:
+            return
+    ext = P.UpdateExtent(p0=p0, p1=p1, root_pages=root)
+    created = set(P.iter_created_nodes(ext))
+    # every created node intersects the range; the root is created
+    for off, size in created:
+        assert P.intersects(off, off + size, p0, p1)
+    assert (0, root) in created
+    # exhaustive check against the full binary tree
+    full = set()
+    size = 1
+    while size <= root:
+        for off in range(0, root, size):
+            if P.intersects(off, off + size, p0, p1):
+                full.add((off, size))
+        size *= 2
+    assert created == full
+
+
+def test_fresh_page_ids_unique():
+    ids = {P.fresh_page_id() for _ in range(1000)}
+    assert len(ids) == 1000
