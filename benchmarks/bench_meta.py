@@ -50,6 +50,23 @@ def run(rep: Reporter) -> None:
     rep.add("read_meta_64page_range", wall / n_iter * 1e6,
             f"leaves_per_query={fetched / n_iter:.1f} root_pages={root_pages}")
 
+    # --- RPC accounting: batched (level-synchronous) vs per-node gets ---
+    # One 64-page READ_META straight against the DHT (no client cache).
+    # ``get_keys`` is the number of tree nodes visited — exactly the
+    # serial DHT round trips the old per-node descent paid; ``get_rounds``
+    # is the batched latency waves the level-synchronous traversal pays
+    # (bounded by tree depth + 1).
+    svc.dht.reset_rpc_counters()
+    p0 = root_pages // 4
+    st.read_meta(svc.dht, owner, v, root_pages, p0, p0 + 64)
+    ctr = svc.dht.rpc_counters()
+    depth = root_pages.bit_length()  # levels in the tree = log2(root)+1
+    reduction = ctr["get_keys"] / max(ctr["get_rounds"], 1)
+    rep.add("read_meta_64page_rpc", 0.0,
+            f"batched_rounds={ctr['get_rounds']} shard_rpcs={ctr['get_shard_rpcs']} "
+            f"per_node_gets={ctr['get_keys']} reduction={reduction:.1f}x "
+            f"depth+1={depth}")
+
     # --- version-manager assignment throughput (serialization point) ---
     n = 2000
     bid2 = c.create(psize=64)

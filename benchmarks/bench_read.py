@@ -29,7 +29,7 @@ def run(rep: Reporter, *, total_mb: int = 128, chunk_mb: int = 8) -> None:
     size = writer.get_size(bid, version)
 
     for n_readers in (1, 25, 50, 100, 175):
-        svc.wire.reset_accounting()
+        svc.reset_rpc_counters()
         chunk = chunk_mb * 1024 * 1024
         t0 = timer()
         for r in range(n_readers):
@@ -44,9 +44,12 @@ def run(rep: Reporter, *, total_mb: int = 128, chunk_mb: int = 8) -> None:
         total_bytes = n_readers * chunk
         agg = total_bytes / max(makespan, 1e-9) / 1e6
         per = agg / n_readers
+        rpc = svc.rpc_report()
         rep.add(
             f"read_concurrent_n{n_readers}",
             wall / n_readers * 1e6,
             f"sim_per_reader={per:.1f}MBps sim_aggregate={agg:.1f}MBps "
-            f"chunk={chunk_mb}MB",
+            f"chunk={chunk_mb}MB "
+            f"rpcs_per_reader={rpc['wire_round_trips'] / n_readers:.1f} "
+            f"pages_per_reader={rpc['provider_read_pages'] / n_readers:.1f}",
         )

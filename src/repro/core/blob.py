@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import itertools
 import threading
+from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -52,44 +53,75 @@ class _NodeCache:
     published root for border resolution and repeated reads re-fetch the
     top tree levels; both become local hits.  Negative lookups are never
     cached (the node may be written later).
+
+    Bounded LRU: at capacity the oldest entry is evicted, so the hot top
+    levels of the tree stay resident (a clear-all here would stampede
+    every client back to the DHT exactly when the cache is hottest).
+    Batch-aware: ``get_many`` serves hits locally and forwards only the
+    misses to the DHT's batched path.
     """
 
     MAX_ENTRIES = 65536
 
     def __init__(self, dht: MetadataDHT) -> None:
         self._dht = dht
-        self._cache: Dict = {}
+        self._cache: "OrderedDict" = OrderedDict()
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
+
+    def _insert(self, key, value) -> None:
+        # caller holds self._lock
+        if key in self._cache:
+            self._cache.move_to_end(key)
+        self._cache[key] = value
+        while len(self._cache) > self.MAX_ENTRIES:
+            self._cache.popitem(last=False)
 
     def get(self, key, peer=None):
         with self._lock:
             if key in self._cache:
                 self.hits += 1
+                self._cache.move_to_end(key)
                 return self._cache[key]
         value = self._dht.get(key, peer=peer)
         self.misses += 1
         if value is not None:
             with self._lock:
-                if len(self._cache) >= self.MAX_ENTRIES:
-                    self._cache.clear()
-                self._cache[key] = value
+                self._insert(key, value)
         return value
+
+    def get_many(self, keys, peer=None):
+        out: Dict = {}
+        missing: List = []
+        with self._lock:
+            for key in dict.fromkeys(keys):
+                if key in self._cache:
+                    self.hits += 1
+                    self._cache.move_to_end(key)
+                    out[key] = self._cache[key]
+                else:
+                    missing.append(key)
+        if missing:
+            fetched = self._dht.get_many(missing, peer=peer)
+            self.misses += len(missing)
+            with self._lock:
+                for key, value in fetched.items():
+                    if value is not None:
+                        self._insert(key, value)
+            out.update(fetched)
+        return out
 
     def put(self, key, value, peer=None):
         self._dht.put(key, value, peer=peer)
         with self._lock:
-            if len(self._cache) < self.MAX_ENTRIES:
-                self._cache[key] = value
+            self._insert(key, value)
 
     def put_many(self, items, peer=None):
         self._dht.put_many(items, peer=peer)
         with self._lock:
             for key, value in items:
-                if len(self._cache) >= self.MAX_ENTRIES:
-                    break
-                self._cache[key] = value
+                self._insert(key, value)
 
 
 class BlobClient:
@@ -159,21 +191,32 @@ class BlobClient:
             self.dht, self._owner_fn(blob_id), version,
             self.vm.root_pages_published(blob_id, version), p0, p1, peer=self.name,
         )
-        buf = bytearray(size)
+        return self._fetch_ranges(pd, offset, size, psize)
 
-        def fetch(d: st.PageDescriptor) -> None:
+    def _fetch_ranges(
+        self, pd: Sequence[st.PageDescriptor], offset: int, size: int, psize: int
+    ) -> bytes:
+        """Fetch the bytes of ``[offset, offset+size)`` from page replicas.
+
+        All page reads go out as one ``fetch_pages`` call, which groups
+        them per provider endpoint (one batched round trip each) instead
+        of paying per-page latency — the data-plane mirror of the
+        level-batched metadata descent.
+        """
+        buf = bytearray(size)
+        requests: List[Tuple[Sequence[str], str, int, int]] = []
+        spans: List[Tuple[int, int]] = []
+        for d in pd:
             page_start = d.page_index * psize
             lo = max(offset, page_start)
             hi = min(offset + size, page_start + d.length)
             if hi <= lo:
-                return
-            chunk = self.pm.fetch_page(
-                d.providers, d.page_id, off=lo - page_start, length=hi - lo,
-                peer=self.name,
-            )
+                continue
+            requests.append((d.providers, d.page_id, lo - page_start, hi - lo))
+            spans.append((lo, hi))
+        chunks = self.pm.fetch_pages(requests, peer=self.name)
+        for (lo, hi), chunk in zip(spans, chunks):
             buf[lo - offset : hi - offset] = chunk
-
-        self._parallel(fetch, pd)
         return bytes(buf)
 
     # ------------------------------------------------------------- WRITE/APPEND
@@ -327,19 +370,7 @@ class BlobClient:
             self.dht, self._owner_fn(blob_id), version, rec.root_pages, p0, p1,
             peer=self.name,
         )
-        out = bytearray(size)
-        for d in pd:
-            page_start = d.page_index * psize
-            lo = max(offset, page_start)
-            hi = min(offset + size, page_start + d.length)
-            if hi <= lo:
-                continue
-            chunk = self.pm.fetch_page(
-                d.providers, d.page_id, off=lo - page_start, length=hi - lo,
-                peer=self.name,
-            )
-            out[lo - offset : hi - offset] = chunk
-        return bytes(out)
+        return self._fetch_ranges(pd, offset, size, psize)
 
     def _build_and_complete(self, blob_id: str, info: AssignInfo, pd_final) -> None:
         leaves = [

@@ -46,6 +46,9 @@ class MetadataShard:
 
     def get(self, key: Hashable, nbytes: int, peer: Optional[str] = None) -> Optional[object]:
         self.wire.transfer(self.shard_id, nbytes, inbound=False, peer=peer)
+        return self.get_local(key)
+
+    def get_local(self, key: Hashable) -> Optional[object]:
         with self._lock:
             return self._kv.get(key)
 
@@ -71,6 +74,28 @@ class MetadataDHT:
         self.shards: List[MetadataShard] = [
             MetadataShard(f"meta-{i:04d}", wire) for i in range(n_shards)
         ]
+        self._ctr_lock = threading.Lock()
+        self._counters: Dict[str, int] = {
+            "get_keys": 0,        # logical keys requested
+            "get_rounds": 0,      # client-visible batched waves (get/get_many calls loop)
+            "get_shard_rpcs": 0,  # per-shard round trips actually issued
+            "put_keys": 0,
+            "put_shard_rpcs": 0,
+        }
+
+    def _count(self, **deltas: int) -> None:
+        with self._ctr_lock:
+            for k, d in deltas.items():
+                self._counters[k] += d
+
+    def rpc_counters(self) -> Dict[str, int]:
+        with self._ctr_lock:
+            return dict(self._counters)
+
+    def reset_rpc_counters(self) -> None:
+        with self._ctr_lock:
+            for k in self._counters:
+                self._counters[k] = 0
 
     # -- key placement: static hash, R consecutive shards -----------------------
     def _home_shards(self, key: Hashable) -> List[MetadataShard]:
@@ -81,10 +106,12 @@ class MetadataDHT:
     def put(self, key: Hashable, value: object, peer: Optional[str] = None) -> None:
         errs = []
         ok = 0
+        self._count(put_keys=1)
         for shard in self._home_shards(key):
             try:
                 shard.put(key, value, self.node_nbytes, peer=peer)
                 ok += 1
+                self._count(put_shard_rpcs=1)
             except EndpointDown as e:
                 errs.append(e)
         if ok == 0:
@@ -100,14 +127,19 @@ class MetadataDHT:
         Storage semantics are unchanged (same keys, same shards).
         """
         by_shard: Dict[MetadataShard, list] = {}
+        n_items = 0
         for key, value in items:
+            n_items += 1
             for shard in self._home_shards(key):
                 by_shard.setdefault(shard, []).append((key, value))
+        self._count(put_keys=n_items)
         failures = 0
         for shard, batch in by_shard.items():
             try:
-                self.wire.transfer(shard.shard_id, self.node_nbytes * len(batch),
-                                   inbound=True, peer=peer, async_peer=True)
+                self.wire.transfer_batch(shard.shard_id,
+                                         [self.node_nbytes] * len(batch),
+                                         inbound=True, peer=peer, async_peer=True)
+                self._count(put_shard_rpcs=1)
                 for key, value in batch:
                     shard.put_local(key, value)
             except EndpointDown:
@@ -120,12 +152,84 @@ class MetadataDHT:
         # replica racing: least-busy replica first
         homes.sort(key=lambda s: self.wire.stats(s.shard_id).sim_busy_until)
         last: Optional[Exception] = None
+        reachable = False
+        self._count(get_keys=1, get_rounds=1)
         for shard in homes:
             try:
-                return shard.get(key, self.node_nbytes, peer=peer)
+                value = shard.get(key, self.node_nbytes, peer=peer)
+                self._count(get_shard_rpcs=1)
+                reachable = True
+                if value is not None:
+                    return value
+                # A None miss on one replica may be the hole a partial
+                # put left behind; keep trying the remaining replicas
+                # before concluding the key is absent.
             except EndpointDown as e:
                 last = e
+        if reachable:
+            return None
         raise EndpointDown(f"all metadata replicas down for {key!r}: {last}")
+
+    def get_many(
+        self, keys, peer: Optional[str] = None
+    ) -> Dict[Hashable, Optional[object]]:
+        """Batched get: group keys per home shard, one round trip per shard.
+
+        The read-side mirror of :meth:`put_many`: READ_META descends a
+        whole tree *level* at a time, so the per-node latency collapses
+        into one batched round trip per (level, shard).  Per-key replica
+        failover matches :meth:`get` exactly — a downed shard or a
+        replication hole sends just the affected keys to their next
+        replica (another batched wave), and ``EndpointDown`` is raised
+        only when every replica of a key is unreachable.
+        """
+        # key -> ordered replica shards still to try (least busy first)
+        pending: Dict[Hashable, List[MetadataShard]] = {}
+        for key in dict.fromkeys(keys):
+            homes = self._home_shards(key)
+            homes.sort(key=lambda s: self.wire.stats(s.shard_id).sim_busy_until)
+            pending[key] = homes
+        out: Dict[Hashable, Optional[object]] = {}
+        reachable_miss = set()  # keys a live shard answered None for
+        self._count(get_keys=len(pending))
+        while pending:
+            self._count(get_rounds=1)
+            by_shard: Dict[MetadataShard, List[Hashable]] = {}
+            for key, homes in pending.items():
+                by_shard.setdefault(homes[0], []).append(key)
+            nxt: Dict[Hashable, List[MetadataShard]] = {}
+            for shard, batch in by_shard.items():
+                try:
+                    self.wire.transfer_batch(shard.shard_id,
+                                             [self.node_nbytes] * len(batch),
+                                             inbound=False, peer=peer,
+                                             async_peer=True)
+                    self._count(get_shard_rpcs=1)
+                except EndpointDown as e:
+                    for key in batch:
+                        rest = pending[key][1:]
+                        if rest:
+                            nxt[key] = rest
+                        elif key in reachable_miss:
+                            out[key] = None
+                        else:
+                            raise EndpointDown(
+                                f"all metadata replicas down for {key!r}: {e}"
+                            )
+                    continue
+                for key in batch:
+                    value = shard.get_local(key)
+                    if value is not None:
+                        out[key] = value
+                        continue
+                    reachable_miss.add(key)
+                    rest = pending[key][1:]
+                    if rest:
+                        nxt[key] = rest  # hole fallthrough, as in get()
+                    else:
+                        out[key] = None
+            pending = nxt
+        return out
 
     # -- introspection -----------------------------------------------------------
     def total_keys(self) -> int:

@@ -77,6 +77,15 @@ class MetadataMissing(RuntimeError):
     """A tree node expected to exist was not found in the DHT."""
 
 
+def _get_many(dht, keys: List[NodeKey], peer: Optional[str]):
+    """Batched node fetch; falls back to per-key gets for plain dicts
+    or other stores without a ``get_many``."""
+    getter = getattr(dht, "get_many", None)
+    if getter is None:
+        return {key: dht.get(key, peer=peer) for key in keys}
+    return getter(keys, peer=peer)
+
+
 # ---------------------------------------------------------------------------
 # Algorithm 3 — READ_META
 # ---------------------------------------------------------------------------
@@ -93,27 +102,36 @@ def read_meta(
 ) -> List[PageDescriptor]:
     """Collect page descriptors covering pages ``[p0, p1)`` of a snapshot.
 
-    Faithful to Algorithm 3: iterative exploration of the subtrees whose
-    range intersects the requested range.  Every update creates its own
-    root, so the snapshot root is node ``(version, 0, root_pages)``.
+    Faithful to Algorithm 3 (explore exactly the subtrees whose range
+    intersects the requested range), but traversed *level-synchronously*:
+    the whole frontier of one tree level is fetched with a single
+    ``get_many`` (one batched round trip per touched shard), so a read
+    costs at most ``depth + 1`` latency waves instead of one serial DHT
+    round trip per visited node.  Every update creates its own root, so
+    the snapshot root is node ``(version, 0, root_pages)``.
     """
     if p0 >= p1:
         return []
     out: List[PageDescriptor] = []
-    stack: List[Tuple[int, int, int]] = [(version, 0, root_pages)]
-    while stack:
-        v, off, size = stack.pop()
-        node = dht.get((owner_of(v), v, off, size), peer=peer)
-        if node is None:
-            raise MetadataMissing(f"node v={v} range=({off},{size})")
-        if isinstance(node, LeafNode):
-            out.append(PageDescriptor(off, node.page_id, node.providers, node.length))
-            continue
-        (lo, ls), (ro, rs) = node_children(off, size)
-        if node.vl is not None and intersects(lo, lo + ls, p0, p1):
-            stack.append((node.vl, lo, ls))
-        if node.vr is not None and intersects(ro, ro + rs, p0, p1):
-            stack.append((node.vr, ro, rs))
+    frontier: List[Tuple[int, int, int]] = [(version, 0, root_pages)]
+    while frontier:
+        keys = [(owner_of(v), v, off, size) for v, off, size in frontier]
+        nodes = _get_many(dht, keys, peer)
+        nxt: List[Tuple[int, int, int]] = []
+        for (v, off, size), key in zip(frontier, keys):
+            node = nodes.get(key)
+            if node is None:
+                raise MetadataMissing(f"node v={v} range=({off},{size})")
+            if isinstance(node, LeafNode):
+                out.append(PageDescriptor(off, node.page_id, node.providers,
+                                          node.length))
+                continue
+            (lo, ls), (ro, rs) = node_children(off, size)
+            if node.vl is not None and intersects(lo, lo + ls, p0, p1):
+                nxt.append((node.vl, lo, ls))
+            if node.vr is not None and intersects(ro, ro + rs, p0, p1):
+                nxt.append((node.vr, ro, rs))
+        frontier = nxt
     out.sort(key=lambda d: d.page_index)
     return out
 
@@ -121,6 +139,9 @@ def read_meta(
 # ---------------------------------------------------------------------------
 # §4.2 — border-set resolution
 # ---------------------------------------------------------------------------
+
+
+_DESCEND = object()  # sentinel: border range needs a published-tree descent
 
 
 class BorderResolver:
@@ -159,14 +180,76 @@ class BorderResolver:
         Highest version < vw whose update range intersects the node
         range; ``None`` if the range was never written.
         """
-        key = (off, size)
-        if key in self._cache:
-            return self._cache[key]
-        v = self._resolve(off, size)
-        self._cache[key] = v
-        return v
+        return self.resolve_many([(off, size)])[(off, size)]
 
-    def _resolve(self, off: int, size: int) -> Optional[int]:
+    def resolve_many(
+        self, ranges: Sequence[Tuple[int, int]]
+    ) -> Dict[Tuple[int, int], Optional[int]]:
+        """Resolve many border ranges with shared batched descents.
+
+        All ranges that need the published tree descend it together,
+        level-synchronously: at each step the distinct nodes the whole
+        cohort needs are fetched with one ``get_many`` (targets sitting
+        on the same node share a single key), so one BUILD_META level's
+        border set costs at most ``depth`` batched rounds — not one
+        serial descent per border node.
+        """
+        out: Dict[Tuple[int, int], Optional[int]] = {}
+        # position of each still-descending target in the published tree
+        pos: Dict[Tuple[int, int], Tuple[int, int, int]] = {}
+        for key in dict.fromkeys(ranges):
+            if key in self._cache:
+                out[key] = self._cache[key]
+                continue
+            off, size = key
+            v = self._resolve_local(off, size)
+            if v is not _DESCEND:
+                self._cache[key] = v
+                out[key] = v
+                continue
+            pos[key] = (self.vp, 0, self.vp_root_pages)
+
+        while pos:
+            done = [k for k, (v, o, s) in pos.items() if (o, s) == k]
+            for k in done:
+                v = pos.pop(k)[0]
+                self._cache[k] = v
+                out[k] = v
+            if not pos:
+                break
+            keys = list(dict.fromkeys(
+                (self.owner_of(v), v, o, s) for v, o, s in pos.values()
+            ))
+            nodes = _get_many(self.dht, keys, self.peer)
+            for target, (v, o, s) in list(pos.items()):
+                node = nodes.get((self.owner_of(v), v, o, s))
+                if node is None:
+                    raise MetadataMissing(f"border descent v={v} range=({o},{s})")
+                if isinstance(node, LeafNode):
+                    raise MetadataMissing(
+                        f"border descent hit leaf above target range {target}"
+                    )
+                off, size = target
+                (lo, ls), (ro, rs) = node_children(o, s)
+                if off >= lo and off + size <= lo + ls:
+                    v, o, s = node.vl, lo, ls
+                elif off >= ro and off + size <= ro + rs:
+                    v, o, s = node.vr, ro, rs
+                else:
+                    raise MetadataMissing(
+                        f"range ({off},{size}) not aligned under ({o},{s})"
+                    )
+                if v is None:
+                    del pos[target]
+                    self._cache[target] = None
+                    out[target] = None
+                else:
+                    pos[target] = (v, o, s)
+        return out
+
+    def _resolve_local(self, off: int, size: int):
+        """Resolve without DHT traffic; ``_DESCEND`` if the published
+        tree must be consulted."""
         # 1. concurrent / recent updates (registry info, no DHT traffic)
         for u, q0, q1 in self.recent:
             if intersects(off, off + size, q0, q1):
@@ -178,27 +261,7 @@ class BorderResolver:
             # Beyond the published root and not touched by any recent
             # update: never written.
             return None
-        v, o, s = self.vp, 0, self.vp_root_pages
-        while (o, s) != (off, size):
-            node = self.dht.get((self.owner_of(v), v, o, s), peer=self.peer)
-            if node is None:
-                raise MetadataMissing(f"border descent v={v} range=({o},{s})")
-            if isinstance(node, LeafNode):
-                raise MetadataMissing(
-                    f"border descent hit leaf above target range ({off},{size})"
-                )
-            (lo, ls), (ro, rs) = node_children(o, s)
-            if off >= lo and off + size <= lo + ls:
-                v, o, s = node.vl, lo, ls
-            elif off >= ro and off + size <= ro + rs:
-                v, o, s = node.vr, ro, rs
-            else:
-                raise MetadataMissing(
-                    f"range ({off},{size}) not aligned under ({o},{s})"
-                )
-            if v is None:
-                return None
-        return v
+        return _DESCEND
 
 
 # ---------------------------------------------------------------------------
@@ -220,8 +283,11 @@ def build_meta(
     Bottom-up construction per Algorithm 4: start from the new leaves,
     create each parent once, wiring the child on the update side to
     ``vw`` and the other child to the version resolved by ``border``.
-    All nodes are then written to the DHT (the paper writes them in
-    parallel; the DHT layer accounts wire cost per shard either way).
+    Each level first *collects* every unresolved border range and hands
+    them to ``border.resolve_many`` as one cohort (shared batched
+    descents), instead of one serial descent per border node.  All nodes
+    are then written to the DHT in one ``put_many`` (the paper writes
+    them in parallel; the DHT layer accounts wire cost per shard).
     """
     if not leaves:
         raise ValueError("update with no pages")
@@ -232,7 +298,9 @@ def build_meta(
 
     frontier = sorted(nodes.keys())
     while frontier:
-        nxt: List[Tuple[int, int]] = []
+        # Plan this level: which parents to create, which of their
+        # children the update supplies (the rest are border ranges).
+        plans: Dict[Tuple[int, int], List[bool]] = {}  # pkey -> [has_l, has_r]
         for off, size in frontier:
             if size >= root_pages:
                 continue  # reached the root
@@ -240,22 +308,26 @@ def build_meta(
                 p_off, p_size, pos_left = off, 2 * size, True
             else:
                 p_off, p_size, pos_left = off - size, 2 * size, False
-            pkey = (p_off, p_size)
-            if pkey in nodes:
-                # Sibling already created this parent; make sure the
-                # parent points at vw on our side too.
-                inner = nodes[pkey]
-                if pos_left and inner.vl != vw:
-                    nodes[pkey] = InnerNode(vl=vw, vr=inner.vr)
-                elif not pos_left and inner.vr != vw:
-                    nodes[pkey] = InnerNode(vl=inner.vl, vr=vw)
-                continue
+            plan = plans.setdefault((p_off, p_size), [False, False])
+            plan[0 if pos_left else 1] = True
+
+        need: List[Tuple[int, int]] = []
+        for (p_off, p_size), (has_l, has_r) in plans.items():
             (lo, ls), (ro, rs) = node_children(p_off, p_size)
-            if pos_left:
-                inner = InnerNode(vl=vw, vr=border.resolve(ro, rs))
-            else:
-                inner = InnerNode(vl=border.resolve(lo, ls), vr=vw)
-            nodes[pkey] = inner
+            if has_l and not has_r:
+                need.append((ro, rs))
+            elif has_r and not has_l:
+                need.append((lo, ls))
+        resolved = border.resolve_many(need)
+
+        nxt: List[Tuple[int, int]] = []
+        for pkey in sorted(plans):
+            has_l, has_r = plans[pkey]
+            (lo, ls), (ro, rs) = node_children(*pkey)
+            nodes[pkey] = InnerNode(
+                vl=vw if has_l else resolved[(lo, ls)],
+                vr=vw if has_r else resolved[(ro, rs)],
+            )
             nxt.append(pkey)
         frontier = nxt
 

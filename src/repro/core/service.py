@@ -161,6 +161,32 @@ class BlobSeerService:
         return svc
 
     # -------------------------------------------------------------- accounting
+    def rpc_report(self) -> Dict[str, int]:
+        """Per-operation RPC/round-trip counters for the whole deployment.
+
+        ``wire_round_trips`` counts every RPC issued on the wire (a
+        batched transfer counts once).  The ``dht_*`` entries break the
+        metadata plane down: ``dht_get_keys`` is what a per-node read
+        path would have paid in round trips, ``dht_get_rounds`` is the
+        number of batched latency waves actually paid, and
+        ``dht_get_shard_rpcs`` the per-shard requests those waves fanned
+        out into.  ``provider_read_rounds``/``provider_read_pages`` are
+        the data-plane analogue.
+        """
+        report: Dict[str, int] = {
+            "wire_round_trips": self.wire.total_round_trips(),
+        }
+        for k, v in self.dht.rpc_counters().items():
+            report[f"dht_{k}"] = v
+        report["provider_read_rounds"] = self.pm.read_rounds
+        report["provider_read_pages"] = self.pm.read_pages
+        return report
+
+    def reset_rpc_counters(self) -> None:
+        self.dht.reset_rpc_counters()
+        self.pm.reset_counters()
+        self.wire.reset_accounting()
+
     def storage_report(self) -> Dict[str, object]:
         provs = self.pm.all_providers()
         return {

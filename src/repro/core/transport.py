@@ -23,7 +23,7 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict
+from typing import Dict, Optional, Sequence
 
 
 GRID5000_BANDWIDTH = 117.5e6  # bytes/s, measured TCP figure from the paper
@@ -62,6 +62,7 @@ class Wire:
     _slow: Dict[str, float] = field(default_factory=dict)  # straggler factor
     _global: threading.Lock = field(default_factory=threading.Lock)
     _sim_clock: float = 0.0
+    _round_trips: int = 0
 
     # -- endpoint registry ---------------------------------------------------
     def _ep(self, endpoint: str) -> WireStats:
@@ -121,6 +122,7 @@ class Wire:
                 st.bytes_out += nbytes
             # Endpoint serialization in simulated time: requests queue.
             with self._global:
+                self._round_trips += 1
                 start = max(self._sim_clock, st.sim_busy_until)
                 st.sim_busy_until = start + cost
         if peer is not None:
@@ -138,6 +140,22 @@ class Wire:
         if self.sleep_scale > 0.0:
             time.sleep(cost * self.sleep_scale)
         return cost
+
+    def transfer_batch(
+        self, endpoint: str, sizes: Sequence[int], *, inbound: bool,
+        peer: Optional[str] = None, async_peer: bool = True,
+    ) -> float:
+        """Account ONE batched request carrying ``len(sizes)`` items.
+
+        The whole batch pays a single latency charge plus the summed
+        bytes — the accounting ``MetadataDHT.put_many`` pioneered, now a
+        first-class primitive shared by the batched read plane
+        (``get_many``, ``fetch_pages``).  Counts as one round trip.
+        """
+        return self.transfer(
+            endpoint, sum(sizes), inbound=inbound, peer=peer,
+            async_peer=async_peer,
+        )
 
     # -- simulated clock -------------------------------------------------------
     def advance_clock(self, seconds: float) -> None:
@@ -157,9 +175,15 @@ class Wire:
         with self._global:
             return sum(s.bytes_in + s.bytes_out for s in self._stats.values())
 
+    def total_round_trips(self) -> int:
+        """RPCs issued so far (a batched transfer counts once)."""
+        with self._global:
+            return self._round_trips
+
     def reset_accounting(self) -> None:
         with self._global:
             for s in self._stats.values():
                 s.bytes_in = s.bytes_out = s.requests = 0
                 s.sim_busy_until = 0.0
             self._sim_clock = 0.0
+            self._round_trips = 0
