@@ -1,0 +1,120 @@
+"""Paper §5 scaling experiments on the deterministic virtual-time harness.
+
+Sweeps N concurrent simulated clients through the four §5 workloads —
+N readers of one blob, N appenders, N writers to disjoint ranges, and a
+mixed read/write load — and emits per-scenario aggregate-throughput
+curves plus RPC-round counts from ``rpc_report()``.  A 256-client
+experiment runs in a couple of wall-clock seconds because every blocking
+point advances a virtual clock instead of sleeping; the schedule itself
+is produced by the per-endpoint wire queueing model (Grid'5000
+constants: 117.5 MB/s, 0.1 ms), so the curves reproduce the paper's
+contention behavior, not Python thread timing.
+
+## Concurrency harness quickstart
+
+Every run is bit-reproducible from its seed::
+
+    from repro.core.scenarios import run_scenario
+    r = run_scenario("appenders", 256, seed=1)
+    r.trace_digest    # identical across runs with the same seed
+    r.aggregate_mbps  # simulated aggregate throughput
+    r.rpc             # per-operation RPC/round-trip counters
+
+To write your own scenario (or inject failures at virtual times), see
+``repro/core/scenarios.py``; to schedule arbitrary client programs, see
+``repro/core/sim.py`` (``Simulator.spawn`` / ``run``).
+
+CLI::
+
+    PYTHONPATH=src python -m benchmarks.bench_concurrency --max-n 256
+    PYTHONPATH=src python -m benchmarks.bench_concurrency \
+        --scenarios readers,mixed --seed 7 --skip-determinism-check
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import Reporter
+from repro.core.scenarios import SCENARIOS, run_scenario
+
+DEFAULT_SEED = 1
+DEFAULT_MAX_N = 256
+
+
+def _sweep_ns(max_n: int):
+    n = 1
+    while n < max_n:
+        yield n
+        n *= 2
+    yield max_n
+
+
+def run(rep: Reporter, *, max_n: int = DEFAULT_MAX_N, seed: int = DEFAULT_SEED,
+        scenarios=None, verify_determinism: bool = True) -> None:
+    """Emit the scaling curves; raises if a seeded replay diverges."""
+    names = list(scenarios or SCENARIOS)
+    diverged = []
+    for name in names:
+        for n in _sweep_ns(max_n):
+            r = run_scenario(name, n, seed=seed)
+            if r.errors:
+                raise RuntimeError(f"{name} n={n}: {r.errors}")
+            rep.add(
+                f"concurrency_{name}_n{n}",
+                r.wall_seconds / max(r.ops, 1) * 1e6,
+                f"sim_aggregate={r.aggregate_mbps:.1f}MBps "
+                f"makespan={r.makespan * 1e3:.2f}ms "
+                f"rpc_rounds={r.rpc['wire_round_trips']} "
+                f"rpc_rounds_per_client={r.rpc['wire_round_trips'] / n:.1f} "
+                f"events={r.events} trace={r.trace_digest[:12]}",
+            )
+            if verify_determinism and n == max_n:
+                again = run_scenario(name, n, seed=seed)
+                same = again.trace_digest == r.trace_digest
+                if not same:
+                    diverged.append(name)
+                rep.add(
+                    f"concurrency_{name}_replay_n{n}", 0.0,
+                    f"deterministic={'yes' if same else 'NO'} "
+                    f"trace={again.trace_digest[:12]}",
+                )
+    if diverged:
+        raise RuntimeError(
+            f"determinism check FAILED: traces diverged across same-seed "
+            f"replays of {diverged}"
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description=sys.modules[__name__].__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("--scenarios", default=",".join(SCENARIOS),
+                    help=f"comma list from {list(SCENARIOS)}")
+    ap.add_argument("--max-n", type=int, default=DEFAULT_MAX_N,
+                    help="largest client count in the 1,2,4,... sweep")
+    ap.add_argument("--seed", type=int, default=DEFAULT_SEED,
+                    help="scheduler seed; same seed => identical event trace")
+    ap.add_argument("--skip-determinism-check", action="store_true",
+                    help="skip the replay (same seed, compare traces) pass")
+    args = ap.parse_args()
+
+    names = [s for s in args.scenarios.split(",") if s]
+    unknown = [s for s in names if s not in SCENARIOS]
+    if unknown:
+        ap.error(f"unknown scenarios {unknown}; known: {list(SCENARIOS)}")
+
+    rep = Reporter()
+    print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+    run(rep, max_n=args.max_n, seed=args.seed, scenarios=names,
+        verify_determinism=not args.skip_determinism_check)
+    print(f"# total wall time: {time.perf_counter() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

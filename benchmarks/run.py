@@ -12,7 +12,8 @@ import sys
 
 from benchmarks.common import Reporter
 
-BENCHES = ["append", "read", "meta", "space", "ckpt", "kernels", "roofline"]
+BENCHES = ["append", "read", "meta", "space", "ckpt", "kernels", "roofline",
+           "concurrency"]
 
 
 def main() -> None:
@@ -34,6 +35,8 @@ def main() -> None:
             from benchmarks import bench_kernels as m
         elif name == "roofline":
             from benchmarks import bench_roofline as m
+        elif name == "concurrency":
+            from benchmarks import bench_concurrency as m
         else:
             raise SystemExit(f"unknown bench {name!r}; known: {BENCHES}")
         m.run(rep)

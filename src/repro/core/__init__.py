@@ -7,6 +7,7 @@ branching — per Nicolae, Antoniu & Bougé (DAMAP 2009).
 
 from repro.core.blob import BlobClient, ReadError
 from repro.core.service import BlobSeerService
+from repro.core.sim import Clock, SimDeadlock, Simulator, WallClock
 from repro.core.transport import Wire, EndpointDown
 from repro.core.version_manager import (
     VersionManager,
@@ -17,10 +18,14 @@ from repro.core.version_manager import (
 __all__ = [
     "BlobClient",
     "BlobSeerService",
+    "Clock",
     "EndpointDown",
     "ReadError",
+    "SimDeadlock",
+    "Simulator",
     "VersionManager",
     "VersionUnpublished",
+    "WallClock",
     "Wire",
     "WriteBeyondEnd",
 ]

@@ -150,8 +150,14 @@ class BlobClient:
 
     # ------------------------------------------------------------- small utils
     def _parallel(self, fn, items: Sequence) -> List:
-        """'for all ... in parallel do' loops of Algorithms 1 and 2."""
-        if self._pool is None or len(items) <= 1:
+        """'for all ... in parallel do' loops of Algorithms 1 and 2.
+
+        Under a virtual clock the loop is always serial: pool threads
+        are not simulated tasks, and the batched wire paths already
+        collapse per-item latency — the simulation models parallel
+        fan-out through `transfer_batch`, not real threads.
+        """
+        if self._pool is None or len(items) <= 1 or self.wire.clock.is_virtual:
             return [fn(x) for x in items]
         return list(self._pool.map(fn, items))
 

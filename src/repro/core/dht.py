@@ -149,8 +149,10 @@ class MetadataDHT:
 
     def get(self, key: Hashable, peer: Optional[str] = None) -> Optional[object]:
         homes = self._home_shards(key)
-        # replica racing: least-busy replica first
-        homes.sort(key=lambda s: self.wire.stats(s.shard_id).sim_busy_until)
+        # replica racing: least-busy replica first (shard-id tie-break
+        # keeps replays deterministic when queue depths are equal)
+        homes.sort(key=lambda s: (self.wire.stats(s.shard_id).sim_busy_until,
+                                  s.shard_id))
         last: Optional[Exception] = None
         reachable = False
         self._count(get_keys=1, get_rounds=1)
@@ -187,7 +189,8 @@ class MetadataDHT:
         pending: Dict[Hashable, List[MetadataShard]] = {}
         for key in dict.fromkeys(keys):
             homes = self._home_shards(key)
-            homes.sort(key=lambda s: self.wire.stats(s.shard_id).sim_busy_until)
+            homes.sort(key=lambda s: (self.wire.stats(s.shard_id).sim_busy_until,
+                                      s.shard_id))
             pending[key] = homes
         out: Dict[Hashable, Optional[object]] = {}
         reachable_miss = set()  # keys a live shard answered None for

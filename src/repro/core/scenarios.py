@@ -1,0 +1,302 @@
+"""Scenario library for the deterministic concurrency harness.
+
+Reproduces the paper's §5 experiments — N concurrent readers of one
+blob, N concurrent appenders, N writers to disjoint ranges, and a mixed
+read/write workload — as client programs scheduled by
+:class:`~repro.core.sim.Simulator` in virtual time.  Hundreds of
+simulated clients run in milliseconds of wall time, every interleaving
+is replayable from the seed, and aggregate throughput falls out of the
+virtual makespan (the same per-endpoint wire model the benchmarks
+always used for derived bandwidth, now actually driving the schedule).
+
+Writing a new scenario::
+
+    def my_scenario(env: ScenarioEnv) -> None:          # setup (driver
+        env.blob = env.client("setup").create(...)      # thread — free)
+
+    def my_program(env: ScenarioEnv, i: int):
+        def prog():                                     # one client task
+            c = env.client(f"c{i:03d}")
+            ...                                         # blocking calls
+            return {"ops": ..., "bytes": ...}           # charge virtual time
+        return prog
+
+    SCENARIOS["mine"] = Scenario("mine", "...", my_scenario, my_program)
+
+then ``run_scenario("mine", n_clients=256, seed=1)``.  Programs must
+return ``{"ops": int, "bytes": int}``; the runner aggregates those into
+the throughput figures.  Failure injection: pass
+``failures=[(virtual_time, endpoint), ...]`` and the runner spawns a
+chaos task that downs each endpoint at its scheduled virtual instant.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.blob import BlobClient
+from repro.core.service import BlobSeerService
+from repro.core.sim import Simulator
+from repro.core.transport import Wire
+
+
+@dataclass
+class ScenarioEnv:
+    """Everything a scenario's setup and client programs can touch."""
+
+    sim: Simulator
+    svc: BlobSeerService
+    n_clients: int
+    psize: int
+    chunk_pages: int
+    ops_per_client: int
+    blob: str = ""
+    state: Dict[str, object] = field(default_factory=dict)
+
+    @property
+    def chunk(self) -> int:
+        return self.chunk_pages * self.psize
+
+    def client(self, name: str) -> BlobClient:
+        return self.svc.client(name)
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One §5 experiment: driver-thread setup + per-client program."""
+
+    name: str
+    doc: str
+    setup: Callable[[ScenarioEnv], None]
+    program: Callable[[ScenarioEnv, int], Callable[[], dict]]
+
+
+@dataclass
+class ScenarioResult:
+    scenario: str
+    n_clients: int
+    seed: int
+    ops: int
+    bytes_moved: int
+    makespan: float            # virtual seconds
+    aggregate_mbps: float      # simulated aggregate throughput
+    wall_seconds: float        # real time the simulation took
+    events: int                # scheduler dispatches
+    rpc: Dict[str, int]
+    trace_digest: str
+    client_results: Dict[str, object]
+    errors: Dict[str, str]
+
+    def row(self) -> str:
+        return (
+            f"{self.scenario},n={self.n_clients},seed={self.seed},"
+            f"agg={self.aggregate_mbps:.1f}MBps,"
+            f"makespan={self.makespan * 1e3:.2f}ms,"
+            f"rpc_rounds={self.rpc.get('wire_round_trips', 0)},"
+            f"wall={self.wall_seconds:.2f}s,trace={self.trace_digest[:12]}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# The four §5 experiments
+# ---------------------------------------------------------------------------
+
+
+def _setup_preloaded(env: ScenarioEnv) -> None:
+    """One blob preloaded so every client has a disjoint chunk to read."""
+    c = env.client("setup")
+    env.blob = c.create(psize=env.psize)
+    payload = b"\xcd" * env.chunk
+    for _ in range(max(1, env.n_clients)):
+        c.append(env.blob, payload)
+    env.state["version"] = c.get_recent(env.blob)
+
+
+def _reader_program(env: ScenarioEnv, i: int):
+    """Fig 2(b): N readers concurrently read distinct chunks of one blob."""
+
+    def prog() -> dict:
+        c = env.client(f"r{i:03d}")
+        v = env.state["version"]
+        size = c.get_size(env.blob, v)
+        done = 0
+        for k in range(env.ops_per_client):
+            off = ((i + k * env.n_clients) * env.chunk) % max(
+                size - env.chunk, 1
+            )
+            data = c.read(env.blob, v, off, env.chunk)
+            assert len(data) == env.chunk
+            done += 1
+        return {"ops": done, "bytes": done * env.chunk}
+
+    return prog
+
+
+def _setup_empty(env: ScenarioEnv) -> None:
+    env.blob = env.client("setup").create(psize=env.psize)
+
+
+def _appender_program(env: ScenarioEnv, i: int):
+    """Fig 2(a)/3: N appenders; total order is asserted by the tests."""
+
+    def prog() -> dict:
+        c = env.client(f"a{i:03d}")
+        versions: List[int] = []
+        payload = bytes([i % 251 + 1]) * env.chunk
+        for _ in range(env.ops_per_client):
+            versions.append(c.append(env.blob, payload))
+        return {"ops": len(versions), "bytes": len(versions) * env.chunk,
+                "versions": versions}
+
+    return prog
+
+
+def _writer_program(env: ScenarioEnv, i: int):
+    """§5 "concurrent writes": each client overwrites its own disjoint
+    range of the preloaded blob, so final content is schedule-independent."""
+
+    def prog() -> dict:
+        c = env.client(f"w{i:03d}")
+        payload = bytes([i % 251 + 1]) * env.chunk
+        versions: List[int] = []
+        for _ in range(env.ops_per_client):
+            versions.append(c.write(env.blob, payload, i * env.chunk))
+        return {"ops": len(versions), "bytes": len(versions) * env.chunk,
+                "versions": versions}
+
+    return prog
+
+
+def _mixed_program(env: ScenarioEnv, i: int):
+    """R/W workload: even clients read the most recent published
+    snapshot while odd clients keep appending."""
+    if i % 2 == 1:
+        return _appender_program(env, i)
+
+    def prog() -> dict:
+        c = env.client(f"r{i:03d}")
+        done = bytes_read = 0
+        for _ in range(env.ops_per_client):
+            v = c.get_recent(env.blob)
+            if v == 0:
+                # nothing published yet: wait (in virtual time) for the
+                # first append instead of spinning on GET_RECENT
+                c.sync(env.blob, 1, timeout=600.0)
+                v = c.get_recent(env.blob)
+            size = c.get_size(env.blob, v)
+            take = min(env.chunk, size)
+            data = c.read(env.blob, v, size - take, take)
+            done += 1
+            bytes_read += len(data)
+        return {"ops": done, "bytes": bytes_read}
+
+    return prog
+
+
+SCENARIOS: Dict[str, Scenario] = {
+    "readers": Scenario(
+        "readers",
+        "N concurrent readers of one blob, disjoint chunks (paper Fig 2b)",
+        _setup_preloaded, _reader_program,
+    ),
+    "appenders": Scenario(
+        "appenders",
+        "N concurrent appenders to one blob (paper Fig 2a/3)",
+        _setup_empty, _appender_program,
+    ),
+    "writers": Scenario(
+        "writers",
+        "N concurrent writers to disjoint ranges (paper Fig 4)",
+        _setup_preloaded, _writer_program,
+    ),
+    "mixed": Scenario(
+        "mixed",
+        "N/2 readers of recent snapshots + N/2 appenders (paper §5 R/W)",
+        _setup_preloaded, _mixed_program,
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+
+def build_env(
+    n_clients: int,
+    *,
+    seed: int = 0,
+    n_providers: int = 16,
+    n_meta_shards: int = 8,
+    psize: int = 64 * 1024,
+    chunk_pages: int = 4,
+    ops_per_client: int = 2,
+    record_trace: bool = False,
+    **svc_kwargs,
+) -> ScenarioEnv:
+    """A simulated deployment + env, ready for spawn/run."""
+    sim = Simulator(seed=seed, record_trace=record_trace)
+    svc = BlobSeerService(
+        n_providers=n_providers, n_meta_shards=n_meta_shards,
+        wire=Wire(clock=sim), **svc_kwargs,
+    )
+    return ScenarioEnv(
+        sim=sim, svc=svc, n_clients=n_clients, psize=psize,
+        chunk_pages=chunk_pages, ops_per_client=ops_per_client,
+    )
+
+
+def run_scenario(
+    scenario: str,
+    n_clients: int,
+    *,
+    seed: int = 0,
+    failures: Sequence[Tuple[float, str]] = (),
+    raise_errors: bool = True,
+    env: Optional[ScenarioEnv] = None,
+    **env_kwargs,
+) -> ScenarioResult:
+    """Run one §5 scenario at ``n_clients`` simulated clients.
+
+    Setup happens on the driver thread (free in virtual time); counters
+    and wire accounting are then zeroed so makespan/throughput measure
+    only the concurrent phase.  ``failures`` downs endpoints at
+    scheduled virtual instants via a chaos task.
+    """
+    spec = SCENARIOS[scenario]
+    if env is None:
+        env = build_env(n_clients, seed=seed, **env_kwargs)
+    sim, svc = env.sim, env.svc
+    spec.setup(env)
+    svc.reset_rpc_counters()
+
+    for i in range(n_clients):
+        sim.spawn(spec.program(env, i), name=f"{scenario}-{i:03d}")
+    for t, endpoint in failures:
+        def chaos(t=t, endpoint=endpoint):
+            sim.sleep_until(t)
+            svc.kill_provider(endpoint)
+            return {"ops": 0, "bytes": 0, "killed": endpoint}
+        sim.spawn(chaos, name=f"chaos-{endpoint}")
+
+    t0 = time.perf_counter()
+    sim.run(raise_errors=raise_errors)
+    wall = time.perf_counter() - t0
+
+    client_results = sim.results()
+    errors = {k: repr(v) for k, v in sim.errors().items()}
+    ops = sum(r.get("ops", 0) for r in client_results.values()
+              if isinstance(r, dict))
+    moved = sum(r.get("bytes", 0) for r in client_results.values()
+                if isinstance(r, dict))
+    makespan = max(sim.now(), svc.wire.sim_span())
+    return ScenarioResult(
+        scenario=scenario, n_clients=n_clients, seed=seed, ops=ops,
+        bytes_moved=moved, makespan=makespan,
+        aggregate_mbps=moved / max(makespan, 1e-12) / 1e6,
+        wall_seconds=wall, events=sim.events_dispatched,
+        rpc=svc.rpc_report(), trace_digest=sim.trace_digest(),
+        client_results=client_results, errors=errors,
+    )

@@ -16,6 +16,7 @@ from typing import Dict, List, Optional
 from repro.core.blob import BlobClient
 from repro.core.dht import MetadataDHT
 from repro.core.provider import DataProvider, ProviderManager
+from repro.core.sim import Clock
 from repro.core.transport import Wire
 from repro.core.version_manager import VersionManager
 from repro.store.file import FilePageStore
@@ -39,8 +40,20 @@ class BlobSeerService:
         spool_dir: Optional[str] = None,
         heartbeat_timeout: float = 5.0,
         io_workers: int = 0,
+        clock: Optional[Clock] = None,
     ) -> None:
-        self.wire = wire if wire is not None else Wire()
+        """``clock``: scheduling backend for every blocking point in the
+        deployment (wall-clock threads by default; pass a
+        ``repro.core.sim.Simulator`` for deterministic virtual time).
+        Ignored when an explicit ``wire`` is supplied — the wire's
+        clock wins, so a deployment never mixes time sources."""
+        if wire is not None:
+            self.wire = wire
+        elif clock is not None:
+            self.wire = Wire(clock=clock)
+        else:
+            self.wire = Wire()
+        self.clock = self.wire.clock
         self.vm = VersionManager(wire=self.wire, wal_path=wal_path)
         self.dht = MetadataDHT(self.wire, n_meta_shards, replication=meta_replication)
         self.pm = ProviderManager(
@@ -85,6 +98,12 @@ class BlobSeerService:
     # ---------------------------------------------------- background maintenance
     def start_monitor(self, interval: float = 0.5, stall_timeout: float = 5.0) -> None:
         """Heartbeat sweep + stalled-writer recovery loop (beyond paper)."""
+        if self.clock.is_virtual:
+            raise RuntimeError(
+                "start_monitor spawns a real thread; under a virtual clock "
+                "spawn a simulated maintenance task instead "
+                "(see core/scenarios.py)"
+            )
 
         def loop() -> None:
             agent = self.client("recovery-agent")

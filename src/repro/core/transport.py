@@ -16,14 +16,21 @@ clients hitting the same provider serialize there, exactly the conflict
 the paper says the provider-manager placement strategy must minimize
 (§4.3 "data access serialization is only necessary when the same
 provider is contacted at the same time by different clients").
+
+Under a virtual :class:`~repro.core.sim.Simulator` clock the queueing
+model is promoted from accounting to *actual scheduling*: the issuing
+task sleeps (in virtual time) until its request's completion instant
+``max(now, endpoint_busy_until) + cost``, so endpoint contention shapes
+the schedule exactly as it shaped the derived makespans before.
 """
 
 from __future__ import annotations
 
 import threading
-import time
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Sequence
+
+from repro.core.sim import Clock, WallClock
 
 
 GRID5000_BANDWIDTH = 117.5e6  # bytes/s, measured TCP figure from the paper
@@ -55,6 +62,7 @@ class Wire:
     bandwidth: float = GRID5000_BANDWIDTH
     latency: float = GRID5000_LATENCY
     sleep_scale: float = 0.0
+    clock: Clock = field(default_factory=WallClock)
 
     _stats: Dict[str, WireStats] = field(default_factory=dict)
     _locks: Dict[str, threading.Lock] = field(default_factory=dict)
@@ -108,12 +116,18 @@ class Wire:
 
         Returns the *simulated* seconds the transfer occupied the
         endpoint.  Raises :class:`EndpointDown` on failed endpoints.
+
+        Under a virtual clock the issuing task additionally *blocks in
+        virtual time* until the request completes — the per-endpoint
+        queue stops being mere accounting and becomes the schedule.
         """
         if self._down.get(endpoint, False):
             raise EndpointDown(endpoint)
         st = self._ep(endpoint)
         factor = self._slow.get(endpoint, 1.0)
         cost = (self.latency + nbytes / self.bandwidth) * factor
+        virtual = self.clock.is_virtual
+        base = self.clock.now() if virtual else self._sim_clock
         with self._locks[endpoint]:
             st.requests += 1
             if inbound:
@@ -123,8 +137,9 @@ class Wire:
             # Endpoint serialization in simulated time: requests queue.
             with self._global:
                 self._round_trips += 1
-                start = max(self._sim_clock, st.sim_busy_until)
+                start = max(base, st.sim_busy_until)
                 st.sim_busy_until = start + cost
+        done_at = start + cost
         if peer is not None:
             peer_cost = (nbytes / self.bandwidth) if async_peer else cost
             pst = self._ep(peer)
@@ -135,10 +150,12 @@ class Wire:
                 else:
                     pst.bytes_in += nbytes
                 with self._global:
-                    start = max(self._sim_clock, pst.sim_busy_until)
+                    start = max(base, pst.sim_busy_until)
                     pst.sim_busy_until = start + peer_cost
-        if self.sleep_scale > 0.0:
-            time.sleep(cost * self.sleep_scale)
+        if virtual:
+            self.clock.sleep_until(done_at)
+        elif self.sleep_scale > 0.0:
+            self.clock.sleep(cost * self.sleep_scale)
         return cost
 
     def transfer_batch(

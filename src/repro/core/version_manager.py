@@ -40,6 +40,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.pages import pages_spanned, root_pages_for
+from repro.core.sim import Clock, WallClock
 from repro.core.transport import Wire
 
 VMGR_ENDPOINT = "vmgr"
@@ -86,11 +87,18 @@ class BlobRecord:
 
 
 class VersionManager:
-    def __init__(self, wire: Optional[Wire] = None, wal_path: Optional[str] = None) -> None:
+    def __init__(self, wire: Optional[Wire] = None, wal_path: Optional[str] = None,
+                 clock: Optional[Clock] = None) -> None:
         self.wire = wire
+        if clock is None:
+            clock = wire.clock if wire is not None else WallClock()
+        self._clock = clock
         self._blobs: Dict[str, BlobRecord] = {}
         self._lock = threading.RLock()
-        self._cond = threading.Condition(self._lock)
+        # SYNC / publication waits block through the clock: real
+        # threading.Condition on the wall backend, virtual-time waits
+        # under a Simulator.
+        self._cond = clock.condition(self._lock)
         self._ids = itertools.count(1)
         self._wal: List[dict] = []
         self._wal_path = wal_path
@@ -210,10 +218,10 @@ class VersionManager:
              client: Optional[str] = None) -> None:
         """SYNC: block until ``version`` is published."""
         self._charge(client)
-        deadline = None if timeout is None else time.monotonic() + timeout
+        deadline = None if timeout is None else self._clock.now() + timeout
         with self._cond:
             while self._blob(blob_id).published < version:
-                remaining = None if deadline is None else deadline - time.monotonic()
+                remaining = None if deadline is None else deadline - self._clock.now()
                 if remaining is not None and remaining <= 0:
                     raise TimeoutError(f"SYNC {blob_id} v{version}")
                 self._cond.wait(remaining)
@@ -260,7 +268,7 @@ class VersionManager:
             rec = UpdateRecord(
                 version=vw, offset=offset, size=size, new_blob_size=new_size,
                 root_pages=root_pages, p0=p0, p1=p1, is_append=is_append,
-                client=client, pd=tuple(pd),
+                client=client, pd=tuple(pd), assigned_at=self._clock.now(),
             )
             b.updates[vw] = rec
             # §4.2: ranges of every update between the last published
@@ -328,7 +336,7 @@ class VersionManager:
         published).  Needed only by unaligned writes that must merge
         boundary-page content from snapshot ``version`` (§3 "slightly
         more complex" path)."""
-        deadline = None if timeout is None else time.monotonic() + timeout
+        deadline = None if timeout is None else self._clock.now() + timeout
         with self._cond:
             while True:
                 b = self._blob(blob_id)
@@ -338,7 +346,7 @@ class VersionManager:
                 rec = b.updates.get(version)
                 if version == 0 or version <= b.published or (rec is not None and rec.complete):
                     return
-                remaining = None if deadline is None else deadline - time.monotonic()
+                remaining = None if deadline is None else deadline - self._clock.now()
                 if remaining is not None and remaining <= 0:
                     raise TimeoutError(f"metadata {blob_id} v{version}")
                 self._cond.wait(remaining)
@@ -365,7 +373,7 @@ class VersionManager:
         recovery agent replays their metadata from the journaled page
         descriptors and calls :meth:`metadata_complete`.
         """
-        now = time.monotonic()
+        now = self._clock.now()
         out = []
         with self._lock:
             for b in self._blobs.values():
@@ -427,6 +435,10 @@ class VersionManager:
                         root_pages=root_pages_for(rec["new_size"], psz),
                         p0=p0, p1=p1, is_append=rec["append"], client=rec["client"],
                         pd=tuple(tuple(x) for x in rec["pd"]),
+                        # stamp on the VM's own clock: the wall-time default
+                        # would make find_stalled never fire under a virtual
+                        # clock (now() - monotonic is hugely negative)
+                        assigned_at=vm._clock.now(),
                     )
                     b.last_assigned = max(b.last_assigned, rec["v"])
                 elif op == "pd":

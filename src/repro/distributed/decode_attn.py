@@ -31,6 +31,15 @@ try:  # jax >= 0.8
 except ImportError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map
 
+import inspect
+
+# jax renamed check_rep -> check_vma; pass whichever this version takes
+_CHECK_KW = (
+    "check_vma"
+    if "check_vma" in inspect.signature(shard_map).parameters
+    else "check_rep"
+)
+
 AXIS = "model"
 
 
@@ -126,7 +135,7 @@ def sharded_decode_attention(
             P(dp_spec, None, AXIS, None),
             P(AXIS),
         ),
-        check_vma=False,
+        **{_CHECK_KW: False},
     )
     out, ck, cv, cpos = fn(q, cache["k"], cache["v"], cache["pos"],
                            k_new, v_new, positions)

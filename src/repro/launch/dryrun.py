@@ -68,7 +68,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, strategy: str,
         t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        ca = compiled.cost_analysis() or {}
+        ca = H.cost_analysis_dict(compiled)
         txt = compiled.as_text()
         coll = H.collective_stats(txt)
         n_chips = mesh.size

@@ -1,38 +1,68 @@
-"""Concurrency: total ordering, atomicity, lock-free data-path claims."""
+"""Concurrency: total ordering, atomicity, lock-free data-path claims.
+
+Rewritten on the deterministic virtual-time harness (core/sim.py):
+the assertions that used to run on 6 real Python threads now run at
+64+ simulated clients, every interleaving replayable from the seed.
+A thread-based smoke test remains for the default wall-clock backend.
+"""
 
 import random
 import threading
 
 import pytest
 
-from repro.core import BlobSeerService
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip when hypothesis is unavailable
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def given(*a, **k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*a, **k):
+        return lambda fn: fn
+
+from repro.core import BlobSeerService, Simulator, Wire
+from repro.core.scenarios import run_scenario
 
 
-def test_concurrent_appends_total_order_and_atomicity():
-    svc = BlobSeerService(n_providers=8, n_meta_shards=4)
+def _sim_service(seed=0, **kw):
+    sim = Simulator(seed=seed)
+    kw.setdefault("n_providers", 8)
+    kw.setdefault("n_meta_shards", 4)
+    svc = BlobSeerService(wire=Wire(clock=sim), **kw)
+    return sim, svc
+
+
+def test_concurrent_appends_total_order_and_atomicity_64_clients():
+    """The seed test's assertions, at 64 simulated appenders."""
+    sim, svc = _sim_service(seed=11)
     c0 = svc.client("main")
     bid = c0.create(psize=32)
-    N_T, N_A = 6, 8
+    N_T, N_A = 64, 3
     results = {}
-    errs = []
 
     def worker(tid):
-        try:
-            c = svc.client(f"w{tid}")
+        def prog():
+            c = svc.client(f"w{tid:03d}")
             for i in range(N_A):
-                payload = bytes([tid + 1]) * random.Random(tid * 100 + i).randint(5, 90)
+                payload = bytes([tid % 250 + 1]) * random.Random(
+                    tid * 100 + i).randint(5, 90)
                 v = c.append(bid, payload)
                 results[(tid, i)] = (v, payload)
-        except Exception as e:  # pragma: no cover
-            errs.append(e)
+        return prog
 
-    ts = [threading.Thread(target=worker, args=(t,)) for t in range(N_T)]
-    [t.start() for t in ts]
-    [t.join() for t in ts]
-    assert not errs
+    for t in range(N_T):
+        sim.spawn(worker(t), name=f"w{t:03d}")
+    sim.run()
     versions = sorted(v for v, _ in results.values())
     assert versions == list(range(1, N_T * N_A + 1))
-    c0.sync(bid, versions[-1], timeout=10)
+    # atomicity + total order: every update's bytes sit exactly at the
+    # offset implied by the version order, in every published snapshot
     offset = 0
     for v, payload in sorted(results.values()):
         assert c0.read(bid, v, offset, len(payload)) == payload
@@ -40,79 +70,103 @@ def test_concurrent_appends_total_order_and_atomicity():
     assert c0.get_size(bid, versions[-1]) == offset
 
 
-def test_concurrent_writers_and_readers():
-    svc = BlobSeerService(n_providers=8, n_meta_shards=4)
-    c = svc.client()
+def test_concurrent_writers_and_readers_64_clients():
+    sim, svc = _sim_service(seed=5)
+    c = svc.client("setup")
     bid = c.create(psize=16)
     c.write(bid, b"\x00" * 512, 0)
-    stop = threading.Event()
-    errs = []
+    n_writers, n_readers = 32, 32
 
     def writer(tid):
-        try:
-            cl = svc.client(f"w{tid}")
-            for i in range(10):
+        def prog():
+            cl = svc.client(f"w{tid:03d}")
+            for i in range(4):
                 off = random.Random(tid * 31 + i).randint(0, 400)
-                cl.write(bid, bytes([tid + 1]) * 30, off)
-        except Exception as e:
-            errs.append(e)
+                cl.write(bid, bytes([tid % 250 + 1]) * 30, off)
+        return prog
 
-    def reader():
-        try:
-            cl = svc.client("r")
-            while not stop.is_set():
+    def reader(tid):
+        def prog():
+            cl = svc.client(f"r{tid:03d}")
+            for _ in range(4):
                 v = cl.get_recent(bid)
                 if v:
-                    data = cl.read(bid, v, 0, cl.get_size(bid, v))
-                    assert len(data) == 512
-        except Exception as e:
-            errs.append(e)
+                    assert len(cl.read(bid, v, 0, cl.get_size(bid, v))) == 512
+        return prog
 
-    ws = [threading.Thread(target=writer, args=(t,)) for t in range(4)]
-    r = threading.Thread(target=reader)
-    r.start()
-    [w.start() for w in ws]
-    [w.join() for w in ws]
-    stop.set()
-    r.join()
-    assert not errs
-    assert c.get_recent(bid) == 1 + 4 * 10
+    for t in range(n_writers):
+        sim.spawn(writer(t), name=f"w{t:03d}")
+    for t in range(n_readers):
+        sim.spawn(reader(t), name=f"r{t:03d}")
+    sim.run()
+    assert c.get_recent(bid) == 1 + n_writers * 4
 
 
-def test_reader_never_sees_partial_update():
-    """Atomicity: every published snapshot is internally consistent —
-    an update's bytes appear all-or-nothing."""
-    svc = BlobSeerService(n_providers=4, n_meta_shards=2)
-    c = svc.client()
+def test_reader_never_sees_partial_update_at_scale():
+    """Atomicity: an update's bytes appear all-or-nothing, checked by 16
+    readers racing 16 writers over the same 8-page range."""
+    sim, svc = _sim_service(seed=3, n_providers=4, n_meta_shards=2)
+    c = svc.client("setup")
     bid = c.create(psize=8)
     c.write(bid, b"\x00" * 256, 0)
-    errs = []
-    stop = threading.Event()
+    torn = []
 
-    def writer():
-        cl = svc.client("w")
-        for i in range(1, 30):
-            cl.write(bid, bytes([i]) * 64, 64)  # same range, 8 pages
+    def writer(tid):
+        def prog():
+            cl = svc.client(f"w{tid:03d}")
+            for i in range(3):
+                cl.write(bid, bytes([((tid * 3 + i) % 250) + 1]) * 64, 64)
+        return prog
 
-    def reader():
-        cl = svc.client("r")
-        while not stop.is_set():
-            v = cl.get_recent(bid)
-            data = cl.read(bid, v, 64, 64)
-            if len(set(data)) != 1:
-                errs.append(f"torn read at v{v}: {set(data)}")
+    def reader(tid):
+        def prog():
+            cl = svc.client(f"r{tid:03d}")
+            for _ in range(6):
+                v = cl.get_recent(bid)
+                data = cl.read(bid, v, 64, 64)
+                if len(set(data)) != 1:
+                    torn.append(f"torn read at v{v}: {set(data)}")
+        return prog
 
-    r = threading.Thread(target=reader)
-    w = threading.Thread(target=writer)
-    r.start()
-    w.start()
-    w.join()
-    stop.set()
-    r.join()
-    assert not errs, errs[:3]
+    for t in range(16):
+        sim.spawn(writer(t), name=f"w{t:03d}")
+        sim.spawn(reader(t), name=f"r{t:03d}")
+    sim.run()
+    assert not torn, torn[:3]
 
 
-def test_sync_blocks_until_published():
+def test_sync_blocks_until_published_virtual_time():
+    """SYNC blocks in virtual time; timeouts fire on the virtual clock
+    without wall-clock sleeping."""
+    sim, svc = _sim_service(seed=2, n_providers=2, n_meta_shards=2)
+    c0 = svc.client("setup")
+    bid = c0.create(psize=16)
+    order = []
+
+    def late_writer():
+        sim.sleep(5.0)  # five *virtual* seconds
+        svc.client("late").append(bid, b"x" * 64)
+        order.append("published")
+
+    def syncer():
+        svc.client("s").sync(bid, 1, timeout=60.0)
+        order.append("sync-returned")
+        assert sim.now() >= 5.0
+
+    def too_impatient():
+        with pytest.raises(TimeoutError):
+            svc.client("t").sync(bid, 99, timeout=1.0)
+        order.append("timeout")
+
+    sim.spawn(late_writer, name="w")
+    sim.spawn(syncer, name="s")
+    sim.spawn(too_impatient, name="t")
+    sim.run()
+    assert order == ["timeout", "published", "sync-returned"]
+
+
+def test_sync_blocks_until_published_wall_backend():
+    """The default threads backend still works (seed test, unchanged)."""
     svc = BlobSeerService(n_providers=2, n_meta_shards=2)
     c = svc.client()
     bid = c.create(psize=16)
@@ -130,3 +184,73 @@ def test_sync_blocks_until_published():
     assert done and c.get_recent(bid) >= 1
     with pytest.raises(TimeoutError):
         c.sync(bid, 99, timeout=0.05)
+
+
+# ---------------------------------------------------------------------------
+# Seeded-interleaving properties
+# ---------------------------------------------------------------------------
+
+
+def test_same_seed_identical_trace_and_content():
+    a = run_scenario("appenders", 24, seed=9, n_providers=6, n_meta_shards=3)
+    b = run_scenario("appenders", 24, seed=9, n_providers=6, n_meta_shards=3)
+    assert a.trace_digest == b.trace_digest
+    assert a.makespan == b.makespan
+    assert a.rpc == b.rpc
+
+
+@pytest.mark.exploration
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31))
+def test_disjoint_writes_schedule_independent(seed):
+    """Published-version reads are identical across schedules: writers to
+    disjoint ranges commute, so the *final* snapshot's content must not
+    depend on the interleaving the seed produced."""
+    from repro.core.scenarios import SCENARIOS, build_env
+
+    contents = []
+    for s in (seed % 1009, (seed * 7 + 3) % 1009):
+        env = build_env(8, seed=s, n_providers=4, n_meta_shards=2,
+                        psize=512, chunk_pages=2, ops_per_client=2)
+        spec = SCENARIOS["writers"]
+        spec.setup(env)
+        for i in range(8):
+            env.sim.spawn(spec.program(env, i), name=f"w{i:03d}")
+        env.sim.run()
+        c = env.client("check")
+        v = c.get_recent(env.blob)
+        assert v == 8 + 8 * 2  # setup appends + every write published
+        contents.append(c.read(env.blob, v, 0, c.get_size(env.blob, v)))
+    assert contents[0] == contents[1]
+
+
+@pytest.mark.exploration
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31))
+def test_append_total_order_any_schedule(seed):
+    """Whatever the interleaving, versions are a contiguous total order
+    and every snapshot's bytes match the version-ordered payloads."""
+    from repro.core.scenarios import SCENARIOS, build_env
+
+    env = build_env(10, seed=seed % 99991, n_providers=4, n_meta_shards=2,
+                    psize=256, chunk_pages=1, ops_per_client=2)
+    spec = SCENARIOS["appenders"]
+    spec.setup(env)
+    for i in range(10):
+        env.sim.spawn(spec.program(env, i), name=f"a{i:03d}")
+    env.sim.run()
+    results = env.sim.results()
+    versions = sorted(
+        v for r in results.values() for v in r["versions"]
+    )
+    assert versions == list(range(1, 21))
+    c = env.client("check")
+    by_version = {
+        v: bytes([i % 251 + 1]) * env.chunk
+        for i, (name, r) in enumerate(sorted(results.items()))
+        for v in r["versions"]
+    }
+    offset = 0
+    for v in versions:
+        assert c.read(env.blob, v, offset, env.chunk) == by_version[v]
+        offset += env.chunk

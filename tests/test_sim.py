@@ -1,0 +1,189 @@
+"""Unit tests for the deterministic discrete-event engine (core/sim.py)."""
+
+import time
+
+import pytest
+
+from repro.core import SimDeadlock, Simulator, WallClock, Wire
+from repro.core.sim import SimCondition
+
+
+def test_virtual_sleep_orders_tasks_and_advances_clock():
+    sim = Simulator(seed=0)
+    log = []
+
+    def a():
+        sim.sleep(2.0)
+        log.append(("a", sim.now()))
+
+    def b():
+        sim.sleep(1.0)
+        log.append(("b", sim.now()))
+
+    sim.spawn(a, name="a")
+    sim.spawn(b, name="b")
+    sim.run()
+    assert log == [("b", 1.0), ("a", 2.0)]
+    assert sim.now() == 2.0
+
+
+def test_same_seed_identical_trace_different_seed_differs():
+    def build(seed):
+        sim = Simulator(seed=seed)
+        for i in range(10):
+            # all tasks spawn at t=0: dispatch order is pure tie-break
+            sim.spawn(lambda: sim.sleep(0.5), name=f"t{i}")
+        sim.run()
+        return sim.trace_digest(), [e[1] for e in sim.trace]
+
+    d1, order1 = build(42)
+    d2, order2 = build(42)
+    d3, order3 = build(43)
+    assert d1 == d2 and order1 == order2
+    assert d3 != d1  # seeded tie-break reshuffles same-time events
+
+
+def test_condition_notify_wakes_waiters_in_virtual_time():
+    sim = Simulator(seed=1)
+    cond = sim.condition()
+    assert isinstance(cond, SimCondition)
+    state = {"ready": False}
+    log = []
+
+    def waiter(name):
+        def prog():
+            with cond:
+                while not state["ready"]:
+                    assert cond.wait(timeout=100.0)
+            log.append((name, sim.now()))
+        return prog
+
+    def setter():
+        sim.sleep(3.0)
+        with cond:
+            state["ready"] = True
+            cond.notify_all()
+
+    sim.spawn(waiter("w1"), name="w1")
+    sim.spawn(waiter("w2"), name="w2")
+    sim.spawn(setter, name="s")
+    sim.run()
+    assert sorted(log) == [("w1", 3.0), ("w2", 3.0)]
+
+
+def test_condition_timeout_fires_on_virtual_clock():
+    sim = Simulator(seed=1)
+    cond = sim.condition()
+    out = {}
+
+    def waiter():
+        with cond:
+            out["notified"] = cond.wait(timeout=2.5)
+        out["at"] = sim.now()
+
+    sim.spawn(waiter, name="w")
+    sim.run()
+    assert out == {"notified": False, "at": 2.5}
+
+
+def test_deadlock_detection():
+    sim = Simulator(seed=0)
+    cond = sim.condition()
+
+    def stuck():
+        with cond:
+            cond.wait()  # nobody will ever notify
+
+    sim.spawn(stuck, name="stuck")
+    with pytest.raises(SimDeadlock, match="stuck"):
+        sim.run()
+
+
+def test_task_errors_propagate_and_are_recorded():
+    sim = Simulator(seed=0)
+
+    def boom():
+        sim.sleep(1.0)
+        raise ValueError("boom")
+
+    sim.spawn(boom, name="boom")
+    with pytest.raises(ValueError, match="boom"):
+        sim.run()
+
+    sim2 = Simulator(seed=0)
+    sim2.spawn(lambda: (_ for _ in ()).throw(ValueError("x")), name="b")
+    sim2.run(raise_errors=False)
+    assert "b" in sim2.errors()
+
+
+def test_wire_endpoint_queueing_serializes_in_virtual_time():
+    """Two tasks hitting the SAME endpoint queue; distinct endpoints
+    overlap — the §4.3 contention model as an actual schedule."""
+    sim = Simulator(seed=0)
+    wire = Wire(clock=sim, bandwidth=1e6, latency=0.0)
+    done = {}
+
+    def hit(name, endpoint):
+        def prog():
+            wire.transfer(endpoint, 1_000_000, inbound=True)  # 1 virtual s
+            done[name] = sim.now()
+        return prog
+
+    sim.spawn(hit("a", "ep0"), name="a")
+    sim.spawn(hit("b", "ep0"), name="b")
+    sim.spawn(hit("c", "ep1"), name="c")
+    sim.run()
+    # ep0's two requests serialize: one finishes at 1s, the other at 2s;
+    # ep1's single request overlaps and finishes at 1s.
+    assert sorted((done["a"], done["b"])) == [1.0, 2.0]
+    assert done["c"] == 1.0
+    assert wire.sim_span() == 2.0
+
+
+def test_driver_thread_work_is_free():
+    sim = Simulator(seed=0)
+    wire = Wire(clock=sim)
+    wire.transfer("ep", 10_000_000, inbound=True)  # setup: no task, no time
+    assert sim.now() == 0.0
+    sim.sleep(5.0)  # driver-thread sleep is a no-op
+    assert sim.now() == 0.0
+
+
+def test_wall_clock_backend_is_default_and_real():
+    wire = Wire()
+    assert isinstance(wire.clock, WallClock)
+    assert not wire.clock.is_virtual
+    t0 = wire.clock.now()
+    wire.transfer("ep", 1024, inbound=True)  # no virtual clock: no sleep
+    assert wire.clock.now() - t0 < 1.0
+
+
+def test_virtual_time_keeps_big_scenarios_fast():
+    """The whole point: a 128-client experiment spans tens of virtual
+    milliseconds of simulated contention but only ~a second of wall
+    time.  The generous bound is the CI budget backstop."""
+    from repro.core.scenarios import run_scenario
+
+    t0 = time.perf_counter()
+    r = run_scenario("appenders", 128, seed=1)
+    wall = time.perf_counter() - t0
+    assert not r.errors, r.errors
+    assert r.makespan > 0.01      # real simulated contention happened
+    assert wall < 20.0, f"virtual-time run took {wall:.1f}s wall"
+
+
+def test_spawn_during_run_and_results():
+    sim = Simulator(seed=0)
+
+    def child():
+        sim.sleep(1.0)
+        return "child-done"
+
+    def parent():
+        sim.spawn(child, name="child")
+        sim.sleep(0.5)
+        return "parent-done"
+
+    sim.spawn(parent, name="parent")
+    sim.run()
+    assert sim.results() == {"parent": "parent-done", "child": "child-done"}
