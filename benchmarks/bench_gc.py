@@ -1,0 +1,110 @@
+"""GC benchmark: reclaimed bytes, mark rounds, sweep RPCs vs history.
+
+Sweeps history length H at a fixed retention window (keep-last-K) and
+measures one GC round per deployment.  The claim under test: the mark
+phase costs what the *live set* costs — batched tree walks over the K
+kept snapshots, at most depth+1 latency waves per tree — while sweep
+RPCs track the retired delta, not total history.  A history 16x longer
+must not make marking meaningfully more expensive.
+
+Emits ``BENCH_gc.json`` (machine-readable, for the perf trajectory)
+next to the CSV rows.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Reporter, timer
+from repro.core import BlobSeerService
+from repro.core.gc import collect_garbage
+
+KEEP_LAST = 8
+PSIZE = 4096
+CHUNK = 4 * PSIZE
+PRELOAD_CHUNKS = 32   # fixed live extent: the blob never grows past this
+HISTORIES = (16, 64, 256)
+
+
+def _one_round(history: int) -> dict:
+    svc = BlobSeerService(n_providers=8, n_meta_shards=8)
+    c = svc.client("loader")
+    bid = c.create(psize=PSIZE)
+    c.set_retention(bid, keep_last=KEEP_LAST)
+    # fixed-size blob + overwrite-only history: the live set (what kept
+    # snapshots reach) stays constant while retired history grows, so
+    # any growth in mark cost would be a scaling bug, not bigger data
+    for i in range(PRELOAD_CHUNKS):
+        c.append(bid, bytes([i % 251 + 1]) * CHUNK)
+    for i in range(history):
+        payload = bytes([(i * 7) % 251 + 1]) * CHUNK
+        c.write(bid, payload, (i % PRELOAD_CHUNKS) * CHUNK)
+    bytes_before = svc.storage_report()["page_bytes"]
+    svc.reset_rpc_counters()
+
+    t0 = timer()
+    stats = collect_garbage(svc)
+    dt = timer() - t0
+    rep = svc.rpc_report()
+
+    return {
+        "history": history,
+        "keep_last": KEEP_LAST,
+        "retired_versions": stats["retired_versions"],
+        "kept_versions": stats["kept_versions"],
+        "reclaimed_bytes": stats["reclaimed_bytes"],
+        "bytes_before": bytes_before,
+        "bytes_after": svc.storage_report()["page_bytes"],
+        "mark_rounds": stats["mark_rounds"],
+        "mark_keys": stats["mark_keys"],
+        "live_nodes": stats["live_nodes"],
+        "swept_nodes": stats["swept_nodes"],
+        "swept_pages": stats["swept_pages"],
+        "sweep_rpcs": rep["dht_delete_shard_rpcs"] + rep["provider_sweep_rounds"],
+        "wire_round_trips": rep["wire_round_trips"],
+        "wall_seconds": dt,
+    }
+
+
+def run(rep: Reporter) -> None:
+    results = [_one_round(h) for h in HISTORIES]
+    for r in results:
+        rep.add(
+            f"gc_hist{r['history']}",
+            r["wall_seconds"] * 1e6,
+            f"reclaimed={r['reclaimed_bytes'] / 1e6:.2f}MB;"
+            f"retired={r['retired_versions']};"
+            f"mark_rounds={r['mark_rounds']};mark_keys={r['mark_keys']};"
+            f"sweep_rpcs={r['sweep_rpcs']}",
+        )
+
+    # Perf contract: mark cost scales with the live set, not history.
+    # 16x more history, same retention window => the mark's batched
+    # rounds grow only with tree depth (log of blob size) and its key
+    # count only with the kept snapshots' trees.
+    first, last = results[0], results[-1]
+    assert last["reclaimed_bytes"] > first["reclaimed_bytes"] > 0
+    assert last["mark_keys"] <= 2 * first["mark_keys"], (
+        f"mark keys grew with history: {first['mark_keys']} -> {last['mark_keys']}"
+    )
+    assert last["mark_rounds"] <= first["mark_rounds"] + 1, (
+        f"mark rounds grew with history: {first['mark_rounds']} -> "
+        f"{last['mark_rounds']}"
+    )
+    growth = last["sweep_rpcs"] / max(first["sweep_rpcs"], 1)
+    rep.add("gc_mark_scaling", 0.0,
+            f"mark_keys_x{last['mark_keys'] / first['mark_keys']:.2f}_"
+            f"for_history_x{last['history'] / first['history']:.0f};"
+            f"sweep_rpc_x{growth:.2f}")
+
+    out = os.path.join(os.getcwd(), "BENCH_gc.json")
+    with open(out, "w") as f:
+        json.dump({"bench": "gc", "keep_last": KEEP_LAST,
+                   "psize": PSIZE, "chunk": CHUNK,
+                   "rounds": results}, f, indent=2)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    run(Reporter())

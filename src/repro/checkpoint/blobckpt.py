@@ -88,6 +88,10 @@ class BlobCheckpointer:
         self.manifest_off = self.psize
         self._digests: Dict[str, np.ndarray] = {}   # path -> (n_pages, 2) u32
         self._layout: Dict[str, Tuple[int, int]] = {}  # path -> (offset, nbytes)
+        # rolling GC pin on the latest commit's manifest snapshot: the
+        # commit pointer dereferences an *older* version than the commit
+        # write itself, which a keep-last retention window cannot see
+        self._manifest_lease: Optional[str] = None
 
     # ------------------------------------------------------------------- save
     def save(self, state, step: int, extra: Optional[Dict] = None) -> CheckpointStats:
@@ -187,6 +191,12 @@ class BlobCheckpointer:
         commit = vm_version.to_bytes(8, "little") + b"\1"
         vc = self.client.write(self.blob_id, commit, 0)
         self.client.sync(self.blob_id, vc)
+        # roll the GC pin forward: keep this commit's manifest snapshot
+        # restorable regardless of the blob's retention window
+        lease = self.client.pin(self.blob_id, vm_version)
+        if self._manifest_lease is not None:
+            self.client.unpin(self._manifest_lease)
+        self._manifest_lease = lease
         self._digests = new_digests
         self._layout = layout
         written_bytes += len(record) + len(commit)
@@ -224,21 +234,39 @@ class BlobCheckpointer:
 
         ``like`` may contain arrays or ShapeDtypeStructs; restored leaves
         are plain numpy (callers ``device_put`` with their shardings).
+
+        The commit-pointer snapshot and the resolved manifest snapshot
+        are both pinned before their reads, so a concurrent GC round
+        (retention-driven snapshot retirement) cannot sweep the
+        checkpoint out from under the manifest or leaf reads.  If GC
+        retires the snapshot before the pin lands, the pin raises a
+        typed ``RetiredVersion`` and the caller can retry at a newer
+        commit.
         """
-        manifest, version = self.read_manifest(version)
-        by_path = {l["path"]: l for l in manifest["leaves"]}
-        flat = jax.tree_util.tree_flatten_with_path(like)
-        leaves = []
-        for path, leaf in flat[0]:
-            key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
-                           for p in path)
-            rec = by_path.get(key)
-            if rec is None:
-                raise KeyError(f"checkpoint v{version} missing leaf {key}")
-            raw = self.client.read(self.blob_id, version, rec["offset"], rec["nbytes"])
-            arr = np.frombuffer(raw, dtype=np.dtype(rec["dtype"])).reshape(rec["shape"])
-            leaves.append(arr)
-        tree = jax.tree_util.tree_unflatten(flat[1], leaves)
+        at = version if version is not None else self.client.get_recent(self.blob_id)
+        outer = self.client.pin(self.blob_id, at) if at > 0 else None
+        try:
+            manifest, version = self.read_manifest(at)
+            lease = self.client.pin(self.blob_id, version)
+        finally:
+            if outer is not None:
+                self.client.unpin(outer)
+        try:
+            by_path = {l["path"]: l for l in manifest["leaves"]}
+            flat = jax.tree_util.tree_flatten_with_path(like)
+            leaves = []
+            for path, leaf in flat[0]:
+                key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                               for p in path)
+                rec = by_path.get(key)
+                if rec is None:
+                    raise KeyError(f"checkpoint v{version} missing leaf {key}")
+                raw = self.client.read(self.blob_id, version, rec["offset"], rec["nbytes"])
+                arr = np.frombuffer(raw, dtype=np.dtype(rec["dtype"])).reshape(rec["shape"])
+                leaves.append(arr)
+            tree = jax.tree_util.tree_unflatten(flat[1], leaves)
+        finally:
+            self.client.unpin(lease)
         if with_manifest:
             return tree, manifest
         return tree

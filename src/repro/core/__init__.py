@@ -10,6 +10,7 @@ from repro.core.service import BlobSeerService
 from repro.core.sim import Clock, SimDeadlock, Simulator, WallClock
 from repro.core.transport import Wire, EndpointDown
 from repro.core.version_manager import (
+    RetiredVersion,
     VersionManager,
     VersionUnpublished,
     WriteBeyondEnd,
@@ -21,6 +22,7 @@ __all__ = [
     "Clock",
     "EndpointDown",
     "ReadError",
+    "RetiredVersion",
     "SimDeadlock",
     "Simulator",
     "VersionManager",
@@ -31,8 +33,8 @@ __all__ = [
 ]
 
 
-def collect_garbage(svc, keep):
-    """Snapshot-retirement GC (see repro.core.gc)."""
+def collect_garbage(svc, keep=None, **kwargs):
+    """Distributed snapshot-retirement GC (see repro.core.gc)."""
     from repro.core.gc import collect_garbage as _gc
 
-    return _gc(svc, keep)
+    return _gc(svc, keep, **kwargs)

@@ -34,7 +34,11 @@ from repro.core.dht import MetadataDHT
 from repro.core.pages import fresh_page_id, pages_spanned
 from repro.core.provider import ProviderManager
 from repro.core.transport import Wire
-from repro.core.version_manager import AssignInfo, VersionManager
+from repro.core.version_manager import (
+    AssignInfo,
+    VersionManager,
+    owner_fn_for_lineage,
+)
 
 _client_ids = itertools.count()
 _client_ids_lock = threading.Lock()
@@ -166,14 +170,7 @@ class BlobClient:
         if chain is None:
             chain = self.vm.lineage(blob_id)
             self._lineage_cache[blob_id] = chain
-
-        def owner(version: int) -> str:
-            for bid, base in chain:
-                if version > base:
-                    return bid
-            return chain[-1][0]
-
-        return owner
+        return owner_fn_for_lineage(chain)
 
     # ---------------------------------------------------------------- CREATE
     def create(self, psize: int = 64 * 1024) -> str:
@@ -181,23 +178,35 @@ class BlobClient:
 
     # ------------------------------------------------------------------ READ
     def read(self, blob_id: str, version: int, offset: int, size: int) -> bytes:
-        """Algorithm 1. Fails if ``version`` unpublished or range OOB."""
+        """Algorithm 1. Fails if ``version`` unpublished or range OOB;
+        raises :class:`~repro.core.version_manager.RetiredVersion` for
+        snapshots retired by GC.
+
+        The read holds a version-manager *read lease* for its duration:
+        GC's sweep barrier drains leases on versions being retired
+        before deleting anything, so an in-flight read never races its
+        pages away.  Reads of kept versions are never blocked.
+        """
         if not self.vm.is_published(blob_id, version):
             raise ReadError(f"{blob_id} v{version} not published")
-        total = self.vm.get_size(blob_id, version, client=self.name)
-        if offset < 0 or size < 0 or offset + size > total:
-            raise ReadError(
-                f"range ({offset},{size}) out of bounds for v{version} (size {total})"
+        total = self.vm.enter_read(blob_id, version, client=self.name)
+        try:
+            if offset < 0 or size < 0 or offset + size > total:
+                raise ReadError(
+                    f"range ({offset},{size}) out of bounds for v{version} (size {total})"
+                )
+            if size == 0:
+                return b""
+            psize = self.vm.psize_of(blob_id)
+            p0, p1 = pages_spanned(offset, size, psize)
+            pd = st.read_meta(
+                self.dht, self._owner_fn(blob_id), version,
+                self.vm.root_pages_published(blob_id, version), p0, p1,
+                peer=self.name,
             )
-        if size == 0:
-            return b""
-        psize = self.vm.psize_of(blob_id)
-        p0, p1 = pages_spanned(offset, size, psize)
-        pd = st.read_meta(
-            self.dht, self._owner_fn(blob_id), version,
-            self.vm.root_pages_published(blob_id, version), p0, p1, peer=self.name,
-        )
-        return self._fetch_ranges(pd, offset, size, psize)
+            return self._fetch_ranges(pd, offset, size, psize)
+        finally:
+            self.vm.exit_read(blob_id, version, client=self.name)
 
     def _fetch_ranges(
         self, pd: Sequence[st.PageDescriptor], offset: int, size: int, psize: int
@@ -424,3 +433,21 @@ class BlobClient:
         bid = self.vm.branch(blob_id, version, client=self.name)
         self._lineage_cache.pop(bid, None)
         return bid
+
+    # ----------------------------------------------------- GC: pins, retention
+    def pin(self, blob_id: str, version: int, ttl: Optional[float] = None) -> str:
+        """Pin a published snapshot against GC; returns the lease id.
+
+        A pinned version is kept (and fully readable) across GC rounds
+        until :meth:`unpin` or until the lease's clock-based ``ttl``
+        expires — the checkpoint layer pins what it restores from.
+        """
+        return self.vm.pin(blob_id, version, client=self.name, ttl=ttl)
+
+    def unpin(self, lease_id: str) -> None:
+        self.vm.unpin(lease_id, client=self.name)
+
+    def set_retention(self, blob_id: str, keep_last: int) -> None:
+        """Keep the newest ``keep_last`` published snapshots at GC time
+        (plus pins, branch roots and in-flight anchors); 0 = keep all."""
+        self.vm.set_retention(blob_id, keep_last, client=self.name)

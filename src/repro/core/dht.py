@@ -18,7 +18,7 @@ import threading
 import zlib
 from typing import Dict, Hashable, List, Optional, Tuple
 
-from repro.core.transport import EndpointDown, Wire
+from repro.core.transport import DELETE_NODE_KEY_BYTES, EndpointDown, Wire
 
 
 class MetadataShard:
@@ -52,6 +52,12 @@ class MetadataShard:
         with self._lock:
             return self._kv.get(key)
 
+    def delete_local(self, key: Hashable) -> bool:
+        """Remove a key (GC sweep). Immutability only ever applies while
+        a key exists: retired keys are deleted, never rewritten."""
+        with self._lock:
+            return self._kv.pop(key, None) is not None
+
     def __len__(self) -> int:
         with self._lock:
             return len(self._kv)
@@ -81,6 +87,8 @@ class MetadataDHT:
             "get_shard_rpcs": 0,  # per-shard round trips actually issued
             "put_keys": 0,
             "put_shard_rpcs": 0,
+            "delete_keys": 0,        # logical keys swept
+            "delete_shard_rpcs": 0,  # batched per-shard delete round trips
         }
 
     def _count(self, **deltas: int) -> None:
@@ -233,6 +241,44 @@ class MetadataDHT:
                         out[key] = None
             pending = nxt
         return out
+
+    def delete_many(
+        self, keys, peer: Optional[str] = None
+    ) -> Tuple[int, List[Hashable]]:
+        """Batched delete (GC sweep): one round trip per touched shard.
+
+        Every replica of every key is contacted; all commands bound for
+        one shard collapse into a single ``transfer_batch`` carrying
+        ``DELETE_NODE_KEY_BYTES`` per key (a delete moves identifiers,
+        not node payloads).  Returns ``(n_deleted, failed_keys)`` where
+        ``failed_keys`` lists keys with at least one unreachable replica
+        — the sweep retries those in a later round (deletes are
+        idempotent), so a downed shard never silently leaks its keys.
+        """
+        by_shard: Dict[MetadataShard, List[Hashable]] = {}
+        n_keys = 0
+        for key in dict.fromkeys(keys):
+            n_keys += 1
+            for shard in self._home_shards(key):
+                by_shard.setdefault(shard, []).append(key)
+        self._count(delete_keys=n_keys)
+        removed: Dict[Hashable, bool] = {}
+        failed_set: Dict[Hashable, bool] = {}
+        for shard, batch in by_shard.items():
+            try:
+                self.wire.transfer_batch(shard.shard_id,
+                                         [DELETE_NODE_KEY_BYTES] * len(batch),
+                                         inbound=True, peer=peer,
+                                         async_peer=True)
+                self._count(delete_shard_rpcs=1)
+                for key in batch:
+                    if shard.delete_local(key):
+                        removed[key] = True
+            except EndpointDown:
+                for key in batch:
+                    failed_set[key] = True
+        deleted = sum(1 for k in removed if k not in failed_set)
+        return deleted, list(failed_set)
 
     # -- introspection -----------------------------------------------------------
     def total_keys(self) -> int:

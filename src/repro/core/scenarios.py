@@ -39,7 +39,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 from repro.core.blob import BlobClient
 from repro.core.service import BlobSeerService
 from repro.core.sim import Simulator
-from repro.core.transport import Wire
+from repro.core.transport import EndpointDown, Wire
+from repro.core.version_manager import RetiredVersion
 
 
 @dataclass
@@ -195,6 +196,98 @@ def _mixed_program(env: ScenarioEnv, i: int):
     return prog
 
 
+def _setup_gc_mixed(env: ScenarioEnv) -> None:
+    """Preloaded blob with a keep-last retention window: GC rounds run
+    *inside* the concurrent phase, racing readers and appenders."""
+    c = env.client("setup")
+    env.blob = c.create(psize=env.psize)
+    payload = b"\xab" * env.chunk
+    for _ in range(4):
+        c.append(env.blob, payload)
+    c.set_retention(env.blob, keep_last=4)
+    env.state["version"] = c.get_recent(env.blob)
+
+
+def _gc_mixed_program(env: ScenarioEnv, i: int):
+    """GC-while-active: client 0 runs GC epochs, odd clients append,
+    even clients read a pinned snapshot plus the most recent one.
+
+    Reads of pinned (kept) versions must NEVER fail — that is the
+    epoch/mark safety property.  Reads of the recency pointer may race
+    past the retention window and get the typed ``RetiredVersion``;
+    those are counted and retried, never crashes.
+    """
+    if i == 0:
+
+        def gc_prog() -> dict:
+            from repro.core.gc import collect_garbage
+
+            clock = env.svc.clock
+            rounds = swept_pages = retired = 0
+            for _ in range(max(4, env.ops_per_client)):
+                clock.sleep(0.02)
+                try:
+                    stats = collect_garbage(env.svc, client=f"gc{i:03d}")
+                except EndpointDown:
+                    continue  # a downed endpoint aborts the round; retried
+                rounds += 1
+                swept_pages += stats["swept_pages"]
+                retired += stats["retired_versions"]
+            return {"ops": rounds, "bytes": 0, "swept_pages": swept_pages,
+                    "retired_versions": retired}
+
+        return gc_prog
+
+    if i % 2 == 1:
+
+        def writer_prog() -> dict:
+            # alternate append/overwrite: overwrites orphan the previous
+            # copies of their pages, so the sweep has bytes to reclaim
+            c = env.client(f"a{i:03d}")
+            payload = bytes([i % 251 + 1]) * env.chunk
+            versions: List[int] = []
+            for k in range(env.ops_per_client):
+                if k % 2 == 0:
+                    versions.append(c.append(env.blob, payload))
+                else:
+                    versions.append(c.write(env.blob, payload, 0))
+            return {"ops": len(versions), "bytes": len(versions) * env.chunk,
+                    "versions": versions}
+
+        return writer_prog
+
+    def reader_prog() -> dict:
+        c = env.client(f"r{i:03d}")
+        v_pin = env.state["version"]
+        lease = c.pin(env.blob, v_pin)
+        pinned_size = c.get_size(env.blob, v_pin)
+        done = bytes_read = pinned_failures = retired_retries = 0
+        try:
+            for _ in range(env.ops_per_client):
+                try:
+                    data = c.read(env.blob, v_pin, 0,
+                                  min(env.chunk, pinned_size))
+                    bytes_read += len(data)
+                except Exception:  # noqa: BLE001 - any failure is a bug
+                    pinned_failures += 1
+                v = c.get_recent(env.blob)
+                try:
+                    size = c.get_size(env.blob, v)
+                    take = min(env.chunk, size)
+                    data = c.read(env.blob, v, size - take, take)
+                    bytes_read += len(data)
+                except RetiredVersion:
+                    retired_retries += 1  # recency raced the GC window: allowed
+                done += 1
+        finally:
+            c.unpin(lease)
+        return {"ops": done, "bytes": bytes_read,
+                "pinned_failures": pinned_failures,
+                "retired_retries": retired_retries}
+
+    return reader_prog
+
+
 SCENARIOS: Dict[str, Scenario] = {
     "readers": Scenario(
         "readers",
@@ -215,6 +308,12 @@ SCENARIOS: Dict[str, Scenario] = {
         "mixed",
         "N/2 readers of recent snapshots + N/2 appenders (paper §5 R/W)",
         _setup_preloaded, _mixed_program,
+    ),
+    "gc_mixed": Scenario(
+        "gc_mixed",
+        "GC epochs racing a mixed pinned-reader/appender workload "
+        "(distributed mark/sweep while clients are active)",
+        _setup_gc_mixed, _gc_mixed_program,
     ),
 }
 

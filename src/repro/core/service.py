@@ -177,6 +177,14 @@ class BlobSeerService:
                     recent_updates=(),
                 )
                 agent._build_and_complete(blob_id, info, rec.pd)
+        # Re-apply retirement: the rebuild above resurrects retired
+        # versions' metadata (snapshot v's border chaining needs v-1's
+        # tree), so the WAL's retire records are re-enforced — swept
+        # versions stay typed-unreadable and their garbage is deleted
+        # again through the wire.
+        from repro.core.gc import resweep_after_restore
+
+        resweep_after_restore(svc)
         return svc
 
     # -------------------------------------------------------------- accounting
@@ -199,6 +207,8 @@ class BlobSeerService:
             report[f"dht_{k}"] = v
         report["provider_read_rounds"] = self.pm.read_rounds
         report["provider_read_pages"] = self.pm.read_pages
+        report["provider_sweep_rounds"] = self.pm.sweep_rounds
+        report["provider_swept_pages"] = self.pm.swept_pages
         return report
 
     def reset_rpc_counters(self) -> None:

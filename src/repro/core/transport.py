@@ -36,6 +36,15 @@ from repro.core.sim import Clock, WallClock
 GRID5000_BANDWIDTH = 117.5e6  # bytes/s, measured TCP figure from the paper
 GRID5000_LATENCY = 0.1e-3     # seconds
 
+# Wire-cost model of the GC sweep verbs (beyond paper; the paper never
+# reclaims space).  A delete carries only an identifier, no payload:
+# the per-item cost of a batched `MetadataDHT.delete_many` /
+# `DataProvider.delete_pages` is one key/page-id plus framing, and the
+# whole batch pays a single latency charge via `transfer_batch`.
+DELETE_NODE_KEY_BYTES = 40  # one metadata-node key in a batched delete
+DELETE_PAGE_CMD_BYTES = 24  # one page-id in a batched page delete
+LIST_PAGE_ENTRY_BYTES = 28  # one (page id, stored-at) entry in an inventory
+
 
 @dataclass
 class WireStats:

@@ -37,7 +37,7 @@ import json
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Set, Tuple
 
 from repro.core.pages import pages_spanned, root_pages_for
 from repro.core.sim import Clock, WallClock
@@ -45,6 +45,21 @@ from repro.core.transport import Wire
 
 VMGR_ENDPOINT = "vmgr"
 _CTRL_MSG_BYTES = 96  # wire-cost estimate of one control-plane RPC
+
+
+def owner_fn_for_lineage(chain: Sequence[Tuple[str, int]]):
+    """Version -> owning blob id, from a :meth:`VersionManager.lineage`
+    chain (youngest first).  The single home of the ownership rule —
+    version ``v`` belongs to the first entry with ``v > base`` — shared
+    by the client (cached chains), the GC mark walk and the manager."""
+
+    def owner(version: int) -> str:
+        for bid, base in chain:
+            if version > base:
+                return bid
+        return chain[-1][0]
+
+    return owner
 
 
 class BlobUnknown(KeyError):
@@ -57,6 +72,13 @@ class VersionUnpublished(RuntimeError):
 
 class WriteBeyondEnd(ValueError):
     """WRITE offset larger than the size of the previous snapshot."""
+
+
+class RetiredVersion(RuntimeError):
+    """The snapshot was retired by GC: its space has been (or is being)
+    reclaimed.  Raised for reads, pins and branches of retired versions
+    — a typed, deliberate answer, never a stray ``KeyError`` from a
+    swept page or tree node."""
 
 
 @dataclass
@@ -73,6 +95,19 @@ class UpdateRecord:
     pd: Tuple = ()         # ((pid, rel_page_index, providers, length), ...)
     complete: bool = False
     assigned_at: float = field(default_factory=time.monotonic)
+    vp: Optional[int] = None  # published anchor handed to the writer (GC keeps it)
+
+
+@dataclass
+class PinLease:
+    """One client's pin on ``(blob, version)``: GC keeps the snapshot
+    until the lease is released or its clock-based expiry passes."""
+
+    lease_id: str
+    blob_id: str
+    version: int
+    client: Optional[str]
+    expires_at: Optional[float]  # None = until released
 
 
 @dataclass
@@ -84,6 +119,10 @@ class BlobRecord:
     updates: Dict[int, UpdateRecord] = field(default_factory=dict)
     last_assigned: int = 0
     published: int = 0
+    keep_last: int = 0                        # retention policy; 0 = keep all
+    retired: Set[int] = field(default_factory=set)  # retire-intent: reads rejected
+    swept: Set[int] = field(default_factory=set)    # sweep finalized
+    gc_epoch: int = 0                         # bumped at every retire-intent
 
 
 class VersionManager:
@@ -103,6 +142,12 @@ class VersionManager:
         self._wal: List[dict] = []
         self._wal_path = wal_path
         self._wal_file = open(wal_path, "a") if wal_path else None
+        # GC state: pin leases (volatile — leases die with the manager,
+        # recovery falls back to retention), and in-flight read counts
+        # per (owner blob, version) for the sweep's drain barrier.
+        self._pins: Dict[str, PinLease] = {}
+        self._pin_ids = itertools.count(1)
+        self._active_reads: Dict[Tuple[str, int], int] = {}
 
     # ------------------------------------------------------------------ utils
     def _charge(self, client: Optional[str]) -> None:
@@ -121,19 +166,36 @@ class VersionManager:
         except KeyError:
             raise BlobUnknown(blob_id)
 
-    def _record(self, blob_id: str, version: int) -> Optional[UpdateRecord]:
-        """Update record for ``version``, walking branch lineage."""
+    def _owner_record(self, blob_id: str, version: int) -> BlobRecord:
+        """BlobRecord owning ``version`` (walks branch lineage)."""
         b = self._blob(blob_id)
         while version <= b.base_version and b.parent is not None:
             b = self._blob(b.parent[0])
-        return b.updates.get(version)
+        return b
+
+    def _record(self, blob_id: str, version: int) -> Optional[UpdateRecord]:
+        """Update record for ``version``, walking branch lineage."""
+        return self._owner_record(blob_id, version).updates.get(version)
+
+    def _check_not_retired(self, blob_id: str, version: int) -> None:
+        # caller holds the lock; retirement is recorded on the owner blob,
+        # so a branch reading an inherited snapshot sees it too
+        if version in self._owner_record(blob_id, version).retired:
+            raise RetiredVersion(f"{blob_id} v{version} retired by GC")
+
+    def _latest_live_published(self, b: BlobRecord) -> int:
+        """Newest published, non-retired version — what GET_RECENT hands
+        out and what new updates anchor their border descents on (a
+        retired anchor would race the sweep)."""
+        v = b.published
+        while v > 0 and v in self._owner_record(b.blob_id, v).retired:
+            v -= 1
+        return v
 
     def owner_of(self, blob_id: str, version: int) -> str:
         """Blob id owning the tree nodes of ``version`` (branch lineage)."""
-        b = self._blob(blob_id)
-        while version <= b.base_version and b.parent is not None:
-            b = self._blob(b.parent[0])
-        return b.blob_id
+        with self._lock:
+            return self._owner_record(blob_id, version).blob_id
 
     def lineage(self, blob_id: str) -> Tuple[Tuple[str, int], ...]:
         """Branch chain as ((blob_id, base_version), ...) youngest first.
@@ -184,6 +246,8 @@ class VersionManager:
             src = self._blob(blob_id)
             if version > src.published:
                 raise VersionUnpublished(f"{blob_id} v{version} not published")
+            if version > 0:
+                self._check_not_retired(blob_id, version)
             bid = f"blob-{next(self._ids):08d}"
             self._blobs[bid] = BlobRecord(
                 blob_id=bid,
@@ -197,10 +261,16 @@ class VersionManager:
             return bid
 
     def get_recent(self, blob_id: str, client: Optional[str] = None) -> int:
-        """GET_RECENT: a recently published version (>= all published before)."""
+        """GET_RECENT: a recently published, still-live version.
+
+        Retired snapshots are never handed out — after a GC round the
+        recency pointer skips them (the retention policy always keeps
+        the newest published version, so this only walks under an
+        explicit-keep GC).
+        """
         self._charge(client)
         with self._lock:
-            return self._blob(blob_id).published
+            return self._latest_live_published(self._blob(blob_id))
 
     def get_size(self, blob_id: str, version: int, client: Optional[str] = None) -> int:
         """GET_SIZE of a *published* snapshot (paper: fails otherwise)."""
@@ -208,6 +278,8 @@ class VersionManager:
         with self._lock:
             if version > self._blob(blob_id).published:
                 raise VersionUnpublished(f"{blob_id} v{version} not published")
+            if version > 0:
+                self._check_not_retired(blob_id, version)
             return self._size_of(blob_id, version)
 
     def psize_of(self, blob_id: str) -> int:
@@ -274,11 +346,15 @@ class VersionManager:
             # §4.2: ranges of every update between the last published
             # snapshot and vw — the information from which the writer
             # resolves border nodes of concurrent unpublished updates.
-            vp = b.published
+            # The anchor vp must be a *live* (non-retired) published
+            # version: the writer descends its tree, and GC keeps every
+            # anchor of an in-flight update pinned until it completes.
+            vp = self._latest_live_published(b)
+            rec.vp = vp if vp > 0 else None
             recent: List[Tuple[int, int, int]] = []
             for u in range(vp + 1, vw):
                 r = b.updates.get(u)
-                if r is not None:
+                if r is not None and u not in b.retired:
                     recent.append((r.version, r.p0, r.p1))
             vp_out: Optional[int] = vp if vp > 0 else None
             vp_root = self._root_pages_of(blob_id, vp) if vp > 0 else 0
@@ -286,6 +362,7 @@ class VersionManager:
                 "op": "assign", "blob": blob_id, "v": vw, "offset": offset,
                 "size": size, "new_size": new_size, "append": is_append,
                 "client": client, "pd": [list(x) for x in pd],
+                "vp": rec.vp,
             })
             return AssignInfo(
                 version=vw, offset=offset, prev_size=prev_size,
@@ -363,7 +440,254 @@ class VersionManager:
         with self._lock:
             if version > self._blob(blob_id).published:
                 raise VersionUnpublished(f"{blob_id} v{version} not published")
+            if version > 0:
+                self._check_not_retired(blob_id, version)
             return self._root_pages_of(blob_id, version)
+
+    def known_blobs(self) -> List[str]:
+        with self._lock:
+            return list(self._blobs)
+
+    # ------------------------------------------------ GC: pins + read leases
+    def pin(self, blob_id: str, version: int, client: Optional[str] = None,
+            ttl: Optional[float] = None) -> str:
+        """Pin ``(blob, version)``: GC keeps it until :meth:`unpin` or the
+        lease's clock-based expiry.  Returns the lease id."""
+        self._charge(client)
+        with self._lock:
+            b = self._blob(blob_id)
+            if version <= 0 or version > b.published:
+                raise VersionUnpublished(f"{blob_id} v{version} not published")
+            self._check_not_retired(blob_id, version)
+            lease_id = f"pin-{next(self._pin_ids):08d}"
+            expires = None if ttl is None else self._clock.now() + ttl
+            self._pins[lease_id] = PinLease(lease_id, blob_id, version,
+                                            client, expires)
+            return lease_id
+
+    def unpin(self, lease_id: str, client: Optional[str] = None) -> None:
+        self._charge(client)
+        with self._lock:
+            self._pins.pop(lease_id, None)
+
+    def _live_pins(self, blob_id: str) -> Set[int]:
+        """Unexpired pinned versions, recorded on the *owner* blob of
+        each pinned version (a pin through a branch pins the ancestor's
+        snapshot).  Expired leases are pruned.  Caller holds the lock."""
+        now = self._clock.now()
+        expired = [lid for lid, p in self._pins.items()
+                   if p.expires_at is not None and p.expires_at < now]
+        for lid in expired:
+            del self._pins[lid]
+        out: Set[int] = set()
+        for p in self._pins.values():
+            if self._owner_record(p.blob_id, p.version).blob_id == blob_id:
+                out.add(p.version)
+        return out
+
+    def pinned_versions(self, blob_id: str) -> FrozenSet[int]:
+        with self._lock:
+            return frozenset(self._live_pins(blob_id))
+
+    def pins(self) -> List[PinLease]:
+        """All currently held (possibly expired) pin leases."""
+        with self._lock:
+            return list(self._pins.values())
+
+    def enter_read(self, blob_id: str, version: int,
+                   client: Optional[str] = None) -> int:
+        """Open a read lease on a published snapshot; returns its size.
+
+        The lease makes the sweep's drain barrier possible: GC retires a
+        version (after which ``enter_read`` answers ``RetiredVersion``)
+        and then waits until every lease opened *before* the intent has
+        been released — an in-flight read never races its pages being
+        deleted.  Reads of kept versions are never blocked or drained;
+        their safety comes from the mark phase.
+        """
+        self._charge(client)
+        with self._lock:
+            b = self._blob(blob_id)
+            if version > b.published:
+                raise VersionUnpublished(f"{blob_id} v{version} not published")
+            if version == 0:
+                return 0
+            self._check_not_retired(blob_id, version)
+            owner = self._owner_record(blob_id, version).blob_id
+            key = (owner, version)
+            self._active_reads[key] = self._active_reads.get(key, 0) + 1
+            return self._size_of(blob_id, version)
+
+    def exit_read(self, blob_id: str, version: int,
+                  client: Optional[str] = None) -> None:
+        """Release a read lease opened by :meth:`enter_read`."""
+        if version == 0:
+            return
+        self._charge(client)
+        with self._cond:
+            owner = self._owner_record(blob_id, version).blob_id
+            key = (owner, version)
+            n = self._active_reads.get(key, 0) - 1
+            if n <= 0:
+                self._active_reads.pop(key, None)
+            else:
+                self._active_reads[key] = n
+            self._cond.notify_all()
+
+    def wait_reads_drained(self, blob_id: str, versions: Iterable[int],
+                           timeout: Optional[float] = None) -> None:
+        """Block until no read lease on ``(blob, v in versions)`` remains.
+
+        The sweep's drain barrier: called after retire-intent (so no new
+        lease on those versions can be opened) and before any delete is
+        issued.  Blocks through the clock, so it is virtual-time-correct
+        under the simulator.
+        """
+        keys = [(blob_id, v) for v in sorted(set(versions))]
+        deadline = None if timeout is None else self._clock.now() + timeout
+        with self._cond:
+            while any(self._active_reads.get(k, 0) > 0 for k in keys):
+                remaining = None if deadline is None else deadline - self._clock.now()
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(f"reads of {blob_id} did not drain")
+                self._cond.wait(remaining)
+
+    # -------------------------------------------- GC: retention + retirement
+    def set_retention(self, blob_id: str, keep_last: int,
+                      client: Optional[str] = None) -> None:
+        """Retention policy: GC keeps the newest ``keep_last`` published
+        snapshots (0 = keep everything).  Journaled, so a recovered
+        manager enforces the same policy."""
+        if keep_last < 0:
+            raise ValueError("keep_last must be >= 0")
+        self._charge(client)
+        with self._lock:
+            self._blob(blob_id).keep_last = keep_last
+            self._journal({"op": "retention", "blob": blob_id,
+                           "keep_last": keep_last})
+
+    def gc_epoch(self, blob_id: str) -> int:
+        with self._lock:
+            return self._blob(blob_id).gc_epoch
+
+    def retired_versions(self, blob_id: str) -> FrozenSet[int]:
+        with self._lock:
+            return frozenset(self._blob(blob_id).retired)
+
+    def plan_retirement(
+        self,
+        blob_id: str,
+        keep_extra: Optional[Iterable[int]] = None,
+        explicit: bool = False,
+        client: Optional[str] = None,
+    ) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+        """Atomically decide and journal this blob's retirement set.
+
+        Returns ``(kept, newly_retired)`` over the blob's *own* published
+        versions (inherited versions ``<= base`` belong to the ancestor's
+        plan).  Kept is the union of
+
+        * the retention window (newest ``keep_last`` published; all of
+          them when no policy is set and ``explicit`` is False),
+        * ``keep_extra`` (the explicit keep set of the old GC API; with
+          ``explicit=True`` it *replaces* the retention window),
+        * unexpired pin leases,
+        * branch roots: any version a child blob was forked at,
+        * the ``vp`` anchor of every assigned-but-incomplete update
+          (an in-flight writer descends that tree for border nodes),
+        * always the newest published version (new updates anchor on it).
+
+        Marking is the retire-*intent*: from this instant every
+        ``enter_read``/``pin``/``branch`` of a retired version answers
+        ``RetiredVersion``.  The intent is journaled before any sweep
+        RPC goes out, so recovery can never resurrect a version whose
+        pages might be partially deleted.
+        """
+        self._charge(client)
+        with self._lock:
+            b = self._blob(blob_id)
+            published = set(range(b.base_version + 1, b.published + 1))
+            if not published:
+                return (), ()
+            if explicit:
+                keep: Set[int] = set(keep_extra or ())
+            elif b.keep_last > 0:
+                keep = set(range(b.published - b.keep_last + 1,
+                                 b.published + 1))
+                keep.update(keep_extra or ())
+            else:
+                keep = set(published)
+            keep.add(b.published)
+            keep.update(self._live_pins(blob_id))
+            for other in self._blobs.values():
+                if other.parent is not None and other.parent[0] == blob_id:
+                    keep.add(other.parent[1])
+                for u in range(other.published + 1, other.last_assigned + 1):
+                    r = other.updates.get(u)
+                    if (r is not None and not r.complete and r.vp is not None
+                            and self._owner_record(other.blob_id, r.vp).blob_id
+                            == blob_id):
+                        keep.add(r.vp)
+            newly = sorted(published - keep - b.retired)
+            kept = tuple(sorted(published - set(newly) - b.retired))
+            if newly:
+                b.retired.update(newly)
+                b.gc_epoch += 1
+                self._journal({"op": "retire", "blob": blob_id,
+                               "versions": newly, "epoch": b.gc_epoch})
+            return kept, tuple(newly)
+
+    def sweep_pending(self, blob_id: str) -> List[UpdateRecord]:
+        """Retired-but-not-yet-finalized updates, oldest first.  The
+        sweep derives each one's candidate set from the journaled page
+        descriptors and the deterministic tree shape — no store scan."""
+        with self._lock:
+            b = self._blob(blob_id)
+            return [b.updates[v] for v in sorted(b.retired - b.swept)
+                    if v in b.updates]
+
+    def finalize_sweep(self, blob_id: str, versions: Iterable[int],
+                       client: Optional[str] = None) -> None:
+        """Journal that the sweep of ``versions`` completed (all deletes
+        acknowledged).  Unfinalized versions are re-swept next round —
+        deletes are idempotent, so partial rounds are safe."""
+        versions = sorted(set(versions))
+        if not versions:
+            return
+        self._charge(client)
+        with self._lock:
+            self._blob(blob_id).swept.update(versions)
+            self._journal({"op": "swept", "blob": blob_id,
+                           "versions": versions})
+
+    def all_page_ids(self) -> Set[str]:
+        """Every page id any assigned update (any blob, any version,
+        published or in flight, retired or not) has ever journaled.
+        The GC orphan scan treats pages outside this set — stored but
+        never registered, e.g. a restriped optimistic append or a
+        writer that died before version assignment — as collectable
+        once they outlive the grace window."""
+        with self._lock:
+            out: Set[str] = set()
+            for b in self._blobs.values():
+                for rec in b.updates.values():
+                    for pd in rec.pd:
+                        out.add(pd[0])
+            return out
+
+    def mark_roots(self) -> Dict[str, List[Tuple[int, int]]]:
+        """Every live snapshot the mark phase must walk: blob id ->
+        [(version, root_pages)] over the blob's own published, non-retired
+        versions.  Inherited versions appear under their owner blob."""
+        with self._lock:
+            out: Dict[str, List[Tuple[int, int]]] = {}
+            for b in self._blobs.values():
+                roots = [(v, b.updates[v].root_pages)
+                         for v in range(b.base_version + 1, b.published + 1)
+                         if v not in b.retired and v in b.updates]
+                if roots:
+                    out[b.blob_id] = roots
+            return out
 
     # ------------------------------------------------------- failure handling
     def find_stalled(self, timeout: float) -> List[Tuple[str, UpdateRecord]]:
@@ -439,6 +763,7 @@ class VersionManager:
                         # would make find_stalled never fire under a virtual
                         # clock (now() - monotonic is hugely negative)
                         assigned_at=vm._clock.now(),
+                        vp=rec.get("vp"),
                     )
                     b.last_assigned = max(b.last_assigned, rec["v"])
                 elif op == "pd":
@@ -449,6 +774,14 @@ class VersionManager:
                     vm._blobs[rec["blob"]].updates[rec["v"]].complete = True
                 elif op == "publish":
                     vm._blobs[rec["blob"]].published = rec["v"]
+                elif op == "retention":
+                    vm._blobs[rec["blob"]].keep_last = rec["keep_last"]
+                elif op == "retire":
+                    b = vm._blobs[rec["blob"]]
+                    b.retired.update(rec["versions"])
+                    b.gc_epoch = max(b.gc_epoch, rec.get("epoch", 0))
+                elif op == "swept":
+                    vm._blobs[rec["blob"]].swept.update(rec["versions"])
         vm._ids = itertools.count(max_id + 1)
         vm._wal_path = wal_path
         vm._wal_file = open(wal_path, "a")

@@ -1,10 +1,11 @@
-"""Snapshot-retirement GC: sweep unreferenced pages, keep live ones."""
+"""Distributed snapshot-retirement GC: retention, pins, typed errors,
+and the all-RPC mark/sweep plane (no shard/provider-store reach-ins)."""
 
-import numpy as np
 import pytest
 
-from repro.core import BlobSeerService
+from repro.core import BlobSeerService, RetiredVersion
 from repro.core.gc import collect_garbage
+from repro.core.version_manager import VersionUnpublished
 
 
 def test_gc_sweeps_retired_versions_keeps_live():
@@ -19,6 +20,7 @@ def test_gc_sweeps_retired_versions_keeps_live():
 
     stats = collect_garbage(svc, {bid: [1, latest]})
     assert stats["swept_pages"] > 0
+    assert stats["reclaimed_bytes"] > 0
     pages_after = svc.storage_report()["pages"]
     assert pages_after < pages_before
 
@@ -29,11 +31,15 @@ def test_gc_sweeps_retired_versions_keeps_live():
     want[64:128] = bytes([7]) * 64
     assert c2.read(bid, latest, 0, 256) == bytes(want)
 
-    # retired versions are gone (metadata swept)
-    from repro.core.segment_tree import MetadataMissing
-    from repro.core.transport import EndpointDown
-    with pytest.raises((MetadataMissing, EndpointDown, KeyError)):
+    # retired versions answer the typed error — from read, size and pin
+    with pytest.raises(RetiredVersion):
         c2.read(bid, 3, 64, 64)
+    with pytest.raises(RetiredVersion):
+        c2.get_size(bid, 4)
+    with pytest.raises(RetiredVersion):
+        c2.pin(bid, 5)
+    with pytest.raises(RetiredVersion):
+        c2.branch(bid, 2)
 
 
 def test_gc_preserves_branch_lineage():
@@ -50,3 +56,171 @@ def test_gc_preserves_branch_lineage():
     assert c2.read(fork, 2, 64, 32) == b"F" * 32
     assert c2.read(fork, 2, 0, 8) == b"base" * 2   # shared base pages live
     assert c2.read(bid, 2, 0, 32) == b"T" * 32
+
+
+def test_gc_goes_through_the_wire_only():
+    """Acceptance: zero direct shard/provider mutations — every sweep
+    delete is a batched RPC visible in rpc_report()."""
+    svc = BlobSeerService(n_providers=4, n_meta_shards=4)
+    c = svc.client()
+    bid = c.create(psize=16)
+    for i in range(8):
+        c.write(bid, bytes([i + 1]) * 128, 0)
+    c.set_retention(bid, keep_last=2)
+    svc.reset_rpc_counters()
+
+    stats = collect_garbage(svc)
+    rep = svc.rpc_report()
+    assert stats["retired_versions"] == 6
+    assert stats["swept_nodes"] > 0 and stats["swept_pages"] > 0
+    # the sweep is batched: per-shard delete RPCs, not per-key
+    assert rep["dht_delete_keys"] >= stats["swept_nodes"]
+    assert 0 < rep["dht_delete_shard_rpcs"] <= svc.dht.replication * len(svc.dht.shards)
+    assert rep["dht_delete_shard_rpcs"] < rep["dht_delete_keys"]
+    # page deletes grouped per provider endpoint
+    assert rep["provider_swept_pages"] == stats["swept_pages"]
+    assert 0 < rep["provider_sweep_rounds"] <= len(svc.pm.all_providers())
+    # the mark phase is level-batched too
+    assert stats["mark_rounds"] < stats["mark_keys"]
+
+
+def test_gc_retention_policy_keeps_last_k():
+    svc = BlobSeerService(n_providers=4, n_meta_shards=4)
+    c = svc.client()
+    bid = c.create(psize=16)
+    for i in range(10):
+        c.append(bid, bytes([i + 1]) * 32)
+    c.set_retention(bid, keep_last=3)
+    collect_garbage(svc)
+    assert sorted(svc.vm.retired_versions(bid)) == list(range(1, 8))
+    for v in (8, 9, 10):
+        assert len(c.read(bid, v, 0, c.get_size(bid, v))) == 32 * v
+    with pytest.raises(RetiredVersion):
+        c.read(bid, 7, 0, 16)
+
+
+def test_gc_respects_pin_leases_and_expiry():
+    svc = BlobSeerService(n_providers=4, n_meta_shards=4)
+    c = svc.client()
+    bid = c.create(psize=16)
+    for i in range(6):
+        c.append(bid, bytes([i + 1]) * 32)
+    c.set_retention(bid, keep_last=1)
+    lease = c.pin(bid, 2)                  # no expiry
+    c.pin(bid, 3, ttl=0.0)                 # expires immediately
+
+    collect_garbage(svc)
+    assert c.read(bid, 2, 0, 64) == b"\x01" * 32 + b"\x02" * 32
+    with pytest.raises(RetiredVersion):
+        c.read(bid, 3, 0, 16)
+
+    c.unpin(lease)
+    collect_garbage(svc)
+    with pytest.raises(RetiredVersion):
+        c.read(bid, 2, 0, 16)
+    # the newest published version always survives
+    assert len(c.read(bid, 6, 0, c.get_size(bid, 6))) == 32 * 6
+
+
+def test_gc_sweep_is_incremental():
+    """A second GC round with no new retirement issues no new deletes:
+    mark cost tracks the live set, sweep cost tracks the retired delta."""
+    svc = BlobSeerService(n_providers=4, n_meta_shards=4)
+    c = svc.client()
+    bid = c.create(psize=16)
+    for i in range(8):
+        c.write(bid, bytes([i + 1]) * 64, 0)   # overwrites: old pages die
+    c.set_retention(bid, keep_last=2)
+    s1 = collect_garbage(svc)
+    assert s1["retired_versions"] == 6 and s1["swept_pages"] > 0
+    svc.reset_rpc_counters()
+    s2 = collect_garbage(svc)
+    assert s2["retired_versions"] == 0
+    assert s2["swept_pages"] == 0 and s2["swept_nodes"] == 0
+    rep = svc.rpc_report()
+    assert rep["dht_delete_shard_rpcs"] == 0
+    assert rep["provider_sweep_rounds"] == 0
+
+
+def test_gc_recollects_shared_garbage_when_keeper_retires():
+    """A retired version whose pages are still shared by a kept snapshot
+    stays *pending*; when the keeper retires later, the shared pages
+    become candidates again and are reclaimed — no permanent leak."""
+    svc = BlobSeerService(n_providers=4, n_meta_shards=4)
+    c = svc.client()
+    bid = c.create(psize=16)
+    c.write(bid, b"A" * 64, 0)             # v1: pages 0-3
+    c.write(bid, b"B" * 16, 0)             # v2: page 0 only (shares 1-3 w/ v1)
+    c.set_retention(bid, keep_last=1)
+    s1 = collect_garbage(svc)
+    assert s1["retired_versions"] == 1     # v1 retired...
+    assert s1["deferred_versions"] == 1    # ...but pending: pages shared by v2
+    c.write(bid, b"C" * 64, 0)             # v3 overwrites everything
+    collect_garbage(svc)                   # retires v2; v1's shares now dead
+    s3 = collect_garbage(svc)
+    assert s3["deferred_versions"] == 0
+    # all that remains is exactly what v3 (the only live version) reaches
+    live = s3["live_pages"]
+    assert sum(p.page_count() for p in svc.pm.all_providers()) == live
+
+
+def test_gc_orphan_scan_reclaims_unjournaled_pages():
+    """Pages stored but never registered with the version manager (a
+    restriped optimistic append, a writer dead before assignment) are
+    reclaimed by the wire-accounted inventory pass once past grace."""
+    svc = BlobSeerService(n_providers=2, n_meta_shards=2)
+    c = svc.client()
+    bid = c.create(psize=16)
+    c.append(bid, b"x" * 24)               # unaligned tail
+    c.append(bid, b"y" * 24)               # phase-1 restripe orphans a page
+    stats = collect_garbage(svc, orphan_grace=None)
+    pages_with_orphan = sum(p.page_count() for p in svc.pm.all_providers())
+    assert pages_with_orphan > stats["live_pages"]  # the orphan exists
+    stats = collect_garbage(svc)           # default grace: too young, spared
+    assert stats["orphan_pages"] == 0
+    stats = collect_garbage(svc, orphan_grace=0.0)
+    assert stats["orphan_pages"] >= 1
+    assert (sum(p.page_count() for p in svc.pm.all_providers())
+            == stats["live_pages"])
+    # every snapshot still reads back
+    assert c.read(bid, 2, 0, 48) == b"x" * 24 + b"y" * 24
+
+
+def test_gc_unpublished_and_version0_untouchable():
+    svc = BlobSeerService(n_providers=2, n_meta_shards=2)
+    c = svc.client()
+    bid = c.create(psize=16)
+    c.append(bid, b"x" * 32)
+    c.set_retention(bid, keep_last=1)
+    collect_garbage(svc)
+    assert c.read(bid, 0, 0, 0) == b""
+    with pytest.raises(VersionUnpublished):
+        c.pin(bid, 0)
+    assert c.read(bid, 1, 0, 32) == b"x" * 32
+
+
+def test_restore_never_resurrects_swept_versions(tmp_path):
+    """WAL retire records survive a cold restart: swept versions stay
+    typed-unreadable and their garbage is re-deleted after rebuild."""
+    spool = str(tmp_path / "spool")
+    wal = str(tmp_path / "wal.jsonl")
+    svc = BlobSeerService(n_providers=3, n_meta_shards=3,
+                          spool_dir=spool, wal_path=wal)
+    c = svc.client()
+    bid = c.create(psize=16)
+    for i in range(6):
+        c.append(bid, bytes([i + 1]) * 48)
+    c.set_retention(bid, keep_last=2)
+    stats = collect_garbage(svc)
+    assert stats["retired_versions"] == 4
+
+    svc2 = BlobSeerService.restore(spool, wal, n_providers=3, n_meta_shards=3)
+    c2 = svc2.client()
+    assert sorted(svc2.vm.retired_versions(bid)) == [1, 2, 3, 4]
+    with pytest.raises(RetiredVersion):
+        c2.read(bid, 2, 0, 16)
+    for v in (5, 6):
+        assert len(c2.read(bid, v, 0, c2.get_size(bid, v))) == 48 * v
+    # rebuilt-then-resweeped: no retired-only metadata left behind
+    live_nodes = collect_garbage(svc2)["live_nodes"]
+    assert svc2.dht.total_keys() <= live_nodes * svc2.dht.replication
