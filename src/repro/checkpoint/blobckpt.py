@@ -188,12 +188,24 @@ class BlobCheckpointer:
         # commit protocol: manifest, then the commit pointer naming the
         # manifest write's snapshot version (restores read AT that version)
         vm_version = self.client.write(self.blob_id, record, self.manifest_off)
-        commit = vm_version.to_bytes(8, "little") + b"\1"
-        vc = self.client.write(self.blob_id, commit, 0)
-        self.client.sync(self.blob_id, vc)
-        # roll the GC pin forward: keep this commit's manifest snapshot
-        # restorable regardless of the blob's retention window
+        self.client.sync(self.blob_id, vm_version)
+        # roll the GC pin forward NOW, while the manifest snapshot is
+        # still the newest published version (always kept): pinning only
+        # after the commit write would leave a window where a retention
+        # GC round retires the manifest of the just-committed checkpoint
         lease = self.client.pin(self.blob_id, vm_version)
+        try:
+            commit = vm_version.to_bytes(8, "little") + b"\1"
+            vc = self.client.write(self.blob_id, commit, 0)
+            self.client.sync(self.blob_id, vc)
+        except BaseException:
+            # failed commit: release the just-taken pin or it leaks an
+            # untimed lease that excludes this snapshot from GC forever
+            try:
+                self.client.unpin(lease)
+            except Exception:
+                pass  # best effort (e.g. wire down); save() still fails
+            raise
         if self._manifest_lease is not None:
             self.client.unpin(self._manifest_lease)
         self._manifest_lease = lease

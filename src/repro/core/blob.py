@@ -189,7 +189,7 @@ class BlobClient:
         """
         if not self.vm.is_published(blob_id, version):
             raise ReadError(f"{blob_id} v{version} not published")
-        total = self.vm.enter_read(blob_id, version, client=self.name)
+        total, root_pages = self.vm.enter_read(blob_id, version, client=self.name)
         try:
             if offset < 0 or size < 0 or offset + size > total:
                 raise ReadError(
@@ -201,7 +201,7 @@ class BlobClient:
             p0, p1 = pages_spanned(offset, size, psize)
             pd = st.read_meta(
                 self.dht, self._owner_fn(blob_id), version,
-                self.vm.root_pages_published(blob_id, version), p0, p1,
+                root_pages, p0, p1,
                 peer=self.name,
             )
             return self._fetch_ranges(pd, offset, size, psize)

@@ -177,6 +177,16 @@ def _sweep(
             done = [rec.version for rec in recs
                     if (blob_id, rec.version) not in incomplete]
             svc.vm.finalize_sweep(blob_id, done, client=peer)
+    else:
+        # restore-time resweep: a version finalized pre-crash whose
+        # re-deletes failed (or whose candidates restore made reachable
+        # again) must leave the finalized set — ordinary rounds only
+        # look at retired - swept, so without this the resurrected
+        # nodes/pages would leak until the next restart's resweep.
+        for blob_id, recs in sorted(pending.items()):
+            redo = [rec.version for rec in recs
+                    if (blob_id, rec.version) in incomplete]
+            svc.vm.unfinalize_sweep(blob_id, redo, client=peer)
 
     return {
         "swept_nodes": swept_nodes,
@@ -204,22 +214,21 @@ def collect_orphans(
     """
     referenced = svc.vm.all_page_ids()
     now = svc.wire.clock.now()
-    freed_pages = freed_bytes = 0
+    doomed: List[Tuple[Tuple[str, ...], str]] = []
     for prov in svc.pm.alive_providers():
         try:
             listing = prov.list_pages(peer=peer)
         except EndpointDown:
             continue
-        doomed = [pid for pid, stored_at in listing
-                  if pid not in referenced and now - stored_at >= grace]
-        if not doomed:
-            continue
-        try:
-            n, nbytes = prov.delete_pages(doomed, peer=peer)
-        except EndpointDown:
-            continue
-        freed_pages += n
-        freed_bytes += nbytes
+        doomed.extend(((prov.pid,), pid) for pid, stored_at in listing
+                      if pid not in referenced and now - stored_at >= grace)
+    if not doomed:
+        return {"orphan_pages": 0, "orphan_bytes": 0}
+    # delete through the provider manager so the sweep counters in
+    # rpc_report() account for orphan reclamation too; a page missed
+    # because its endpoint just went down is simply retried by the next
+    # round's inventory (it is still unreferenced)
+    freed_pages, freed_bytes, _missed = svc.pm.delete_pages(doomed, peer=peer)
     return {"orphan_pages": freed_pages, "orphan_bytes": freed_bytes}
 
 
@@ -296,7 +305,9 @@ def resweep_after_restore(svc, client: str = "gc-restore") -> Dict[str, int]:
     records are authoritative), so a swept version never comes back:
     its reads still answer ``RetiredVersion`` and its dead nodes/pages
     are removed again.  Idempotent, wire-accounted, same code path as a
-    live sweep.
+    live sweep.  Versions whose re-deletes report failures are
+    *un-finalized* (journaled), so ordinary live rounds keep retrying
+    them instead of leaking until the next restart.
     """
     vm = svc.vm
     pending: Dict[str, List] = {}

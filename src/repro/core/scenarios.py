@@ -227,7 +227,11 @@ def _gc_mixed_program(env: ScenarioEnv, i: int):
             for _ in range(max(4, env.ops_per_client)):
                 clock.sleep(0.02)
                 try:
-                    stats = collect_garbage(env.svc, client=f"gc{i:03d}")
+                    # orphan inventory off: it is a slow-cadence job (600s
+                    # grace) and would ship every provider's full listing
+                    # each 0.02s round for nothing
+                    stats = collect_garbage(env.svc, client=f"gc{i:03d}",
+                                            orphan_grace=None)
                 except EndpointDown:
                     continue  # a downed endpoint aborts the round; retried
                 rounds += 1

@@ -142,6 +142,7 @@ class BlobSeerService:
         wal_path: str,
         n_providers: int,
         n_meta_shards: int = 4,
+        resweep: bool = True,
         **kwargs,
     ) -> "BlobSeerService":
         """Cold-restart a deployment from durable state.
@@ -151,6 +152,10 @@ class BlobSeerService:
         by replaying BUILD_META for every completed update in version
         order — possible because page descriptors are journaled at
         version-assignment time (see version_manager.assign_version).
+
+        ``resweep=False`` skips the retirement re-apply pass (callers
+        that want to schedule ``gc.resweep_after_restore`` themselves,
+        e.g. after reviving providers that were down at restart).
         """
         svc = cls(
             n_providers=n_providers, n_meta_shards=n_meta_shards,
@@ -182,9 +187,10 @@ class BlobSeerService:
         # tree), so the WAL's retire records are re-enforced — swept
         # versions stay typed-unreadable and their garbage is deleted
         # again through the wire.
-        from repro.core.gc import resweep_after_restore
+        if resweep:
+            from repro.core.gc import resweep_after_restore
 
-        resweep_after_restore(svc)
+            resweep_after_restore(svc)
         return svc
 
     # -------------------------------------------------------------- accounting

@@ -495,15 +495,20 @@ class VersionManager:
             return list(self._pins.values())
 
     def enter_read(self, blob_id: str, version: int,
-                   client: Optional[str] = None) -> int:
-        """Open a read lease on a published snapshot; returns its size.
+                   client: Optional[str] = None) -> Tuple[int, int]:
+        """Open a read lease on a published snapshot; returns the
+        snapshot's ``(size, root_pages)`` atomically with admission.
 
         The lease makes the sweep's drain barrier possible: GC retires a
         version (after which ``enter_read`` answers ``RetiredVersion``)
         and then waits until every lease opened *before* the intent has
         been released — an in-flight read never races its pages being
         deleted.  Reads of kept versions are never blocked or drained;
-        their safety comes from the mark phase.
+        their safety comes from the mark phase.  Returning the root
+        snapshot here means an admitted read needs no further
+        retired-checked version-manager call: a retire-intent landing
+        after admission cannot spuriously fail it (the drain barrier
+        lets it complete).
         """
         self._charge(client)
         with self._lock:
@@ -511,12 +516,13 @@ class VersionManager:
             if version > b.published:
                 raise VersionUnpublished(f"{blob_id} v{version} not published")
             if version == 0:
-                return 0
+                return 0, 0
             self._check_not_retired(blob_id, version)
             owner = self._owner_record(blob_id, version).blob_id
             key = (owner, version)
             self._active_reads[key] = self._active_reads.get(key, 0) + 1
-            return self._size_of(blob_id, version)
+            return (self._size_of(blob_id, version),
+                    self._root_pages_of(blob_id, version))
 
     def exit_read(self, blob_id: str, version: int,
                   client: Optional[str] = None) -> None:
@@ -592,7 +598,9 @@ class VersionManager:
         * ``keep_extra`` (the explicit keep set of the old GC API; with
           ``explicit=True`` it *replaces* the retention window),
         * unexpired pin leases,
-        * branch roots: any version a child blob was forked at,
+        * branch roots: any version this blob *owns* that some blob was
+          forked at — including forks taken through an intermediate
+          branch at an inherited version,
         * the ``vp`` anchor of every assigned-but-incomplete update
           (an in-flight writer descends that tree for border nodes),
         * always the newest published version (new updates anchor on it).
@@ -620,7 +628,14 @@ class VersionManager:
             keep.add(b.published)
             keep.update(self._live_pins(blob_id))
             for other in self._blobs.values():
-                if other.parent is not None and other.parent[0] == blob_id:
+                # owner-normalized like pins: a fork point at an inherited
+                # version (C = branch(B, 3) where v3 is owned by A, B's
+                # ancestor) must be kept by v3's *owner*, not by the blob
+                # named in parent[0]
+                if (other.parent is not None and other.parent[1] > 0
+                        and self._owner_record(
+                            other.parent[0], other.parent[1]).blob_id
+                        == blob_id):
                     keep.add(other.parent[1])
                 for u in range(other.published + 1, other.last_assigned + 1):
                     r = other.updates.get(u)
@@ -658,6 +673,29 @@ class VersionManager:
         with self._lock:
             self._blob(blob_id).swept.update(versions)
             self._journal({"op": "swept", "blob": blob_id,
+                           "versions": versions})
+
+    def unfinalize_sweep(self, blob_id: str, versions: Iterable[int],
+                         client: Optional[str] = None) -> None:
+        """Journal that ``versions`` need re-sweeping despite a prior
+        finalize: the restore-time resweep found work left (restore
+        resurrects a finalized version's nodes/pages, and a re-delete
+        can partially fail, e.g. a provider down during recovery).
+        Pulling them out of the finalized set puts them back in
+        :meth:`sweep_pending`, so ordinary live rounds retry the
+        deletes instead of leaking the resurrected items until the
+        next restart."""
+        versions = set(versions)
+        if not versions:
+            return
+        self._charge(client)
+        with self._lock:
+            b = self._blob(blob_id)
+            versions = sorted(versions & b.swept)
+            if not versions:
+                return  # never finalized: already pending, nothing to journal
+            b.swept.difference_update(versions)
+            self._journal({"op": "unswept", "blob": blob_id,
                            "versions": versions})
 
     def all_page_ids(self) -> Set[str]:
@@ -782,6 +820,9 @@ class VersionManager:
                     b.gc_epoch = max(b.gc_epoch, rec.get("epoch", 0))
                 elif op == "swept":
                     vm._blobs[rec["blob"]].swept.update(rec["versions"])
+                elif op == "unswept":
+                    vm._blobs[rec["blob"]].swept.difference_update(
+                        rec["versions"])
         vm._ids = itertools.count(max_id + 1)
         vm._wal_path = wal_path
         vm._wal_file = open(wal_path, "a")

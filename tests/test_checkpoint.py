@@ -182,3 +182,64 @@ def test_concurrent_ingestion_does_not_disturb_pinned_reader(ckpt_env):
     stop.set()
     t.join()
     np.testing.assert_array_equal(first[0], again[0])
+
+
+def test_rolling_pin_taken_before_commit_survives_gc_race(ckpt_env):
+    """Worst-case interleaving: a retention GC round (keep-last-1) fires
+    after every single write RPC of save(). The rolling manifest pin is
+    taken while the manifest snapshot is still the newest published
+    version — before the commit pointer write — so no round can retire
+    the manifest of a just-committed checkpoint."""
+    from repro.core import collect_garbage
+
+    svc, c = ckpt_env
+    ck = BlobCheckpointer(c, psize=256, header_pages=8)
+    c.set_retention(ck.blob_id, keep_last=1)
+    orig_write = c.write
+
+    def write_then_gc(bid, buf, off):
+        v = orig_write(bid, buf, off)
+        collect_garbage(svc, orphan_grace=None)
+        return v
+
+    c.write = write_then_gc
+    try:
+        s = _state(1)
+        ck.save(s, step=1)
+        got = ck.restore(jax.eval_shape(lambda: s))
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(s)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # the next save rolls the pin forward under the same race
+        s2 = dict(s, step=jnp.asarray(2, jnp.int32))
+        ck.save(s2, step=2)
+        got2 = ck.restore(jax.eval_shape(lambda: s2))
+        np.testing.assert_array_equal(np.asarray(got2["step"]), 2)
+    finally:
+        c.write = orig_write
+
+
+def test_failed_commit_releases_fresh_pin(ckpt_env):
+    """If the commit-pointer write fails after the rolling pin was
+    taken, the pin is released — a failed save() must not leak an
+    untimed lease that excludes its manifest snapshot from GC forever."""
+    svc, c = ckpt_env
+    ck = BlobCheckpointer(c, psize=256, header_pages=8)
+    s = _state(1)
+    ck.save(s, step=1)
+    base = len(svc.vm.pins())
+    orig_write = c.write
+
+    def fail_commit(bid, buf, off):
+        if off == 0 and len(buf) == 9:  # the commit-pointer record
+            raise RuntimeError("injected commit failure")
+        return orig_write(bid, buf, off)
+
+    c.write = fail_commit
+    try:
+        with pytest.raises(RuntimeError):
+            ck.save(_state(2, scale=2.0), step=2)
+    finally:
+        c.write = orig_write
+    assert len(svc.vm.pins()) == base  # no orphan lease
+    ck.save(_state(3, scale=3.0), step=3)  # next save recovers cleanly
+    assert len(svc.vm.pins()) == base

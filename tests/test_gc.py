@@ -199,6 +199,104 @@ def test_gc_unpublished_and_version0_untouchable():
     assert c.read(bid, 1, 0, 32) == b"x" * 32
 
 
+def test_gc_keeps_nested_branch_roots_at_inherited_versions():
+    """A fork taken through an intermediate branch at an *inherited*
+    version (C = branch(B, 3) with B = branch(A, 5): v3 is owned by A)
+    is protected on the owner blob — GC on A must not retire v3, or
+    C's published root snapshot would be permanently unreadable."""
+    svc = BlobSeerService(n_providers=4, n_meta_shards=4)
+    c = svc.client()
+    a = c.create(psize=16)
+    for i in range(5):
+        c.write(a, bytes([i + 1]) * 64, 0)     # v1..v5 overwrite the range
+    b = c.branch(a, 5)
+    cc = c.branch(b, 3)                        # fork point owned by A, via B
+
+    c.set_retention(a, 1)
+    collect_garbage(svc)
+    assert sorted(svc.vm.retired_versions(a)) == [1, 2, 4]  # v3 + v5 kept
+    # C's root snapshot stays byte-identical and extensible
+    assert c.read(cc, 3, 0, 64) == bytes([3]) * 64
+    c.append(cc, b"z" * 16)                    # C v4
+    assert c.read(cc, 4, 64, 16) == b"z" * 16
+    assert c.read(b, 5, 0, 64) == bytes([5]) * 64  # B's direct root too
+
+
+def test_admitted_read_survives_retire_intent():
+    """A read the lease admitted completes even when the retire-intent
+    lands before its metadata walk: enter_read returns (size,
+    root_pages) atomically, so the read path makes no further
+    retired-checked version-manager call — 'rejected at enter_read or
+    drained', with no third outcome."""
+    from repro.core import segment_tree as st
+    from repro.core.pages import pages_spanned
+    from repro.core.version_manager import RetiredVersion as RV
+
+    svc = BlobSeerService(n_providers=4, n_meta_shards=4)
+    c = svc.client()
+    bid = c.create(psize=16)
+    c.write(bid, b"A" * 64, 0)                 # v1
+    c.write(bid, b"B" * 64, 0)                 # v2
+
+    total, root = svc.vm.enter_read(bid, 1, client="r")  # admitted
+    try:
+        _, newly = svc.vm.plan_retirement(bid, keep_extra=[2],
+                                          explicit=True, client="gc")
+        assert 1 in newly                      # intent landed mid-read
+        with pytest.raises(RV):                # new admissions rejected...
+            svc.vm.enter_read(bid, 1)
+        # ...but the in-flight read still completes off its admission
+        # snapshot (the sweep's drain barrier is waiting on the lease)
+        p0, p1 = pages_spanned(0, total, 16)
+        pd = st.read_meta(svc.dht, c._owner_fn(bid), 1, root, p0, p1,
+                          peer="r")
+        assert c._fetch_ranges(pd, 0, total, 16) == b"A" * 64
+    finally:
+        svc.vm.exit_read(bid, 1, client="r")
+
+
+def test_restore_resweep_failure_unfinalizes_for_retry(tmp_path):
+    """A version finalized pre-crash whose restore-time re-deletes fail
+    (providers down during recovery) is pulled back out of the
+    finalized set, so ordinary live rounds retry it — the resurrected
+    nodes/pages don't leak until the next restart."""
+    from repro.core.gc import resweep_after_restore
+
+    spool = str(tmp_path / "spool")
+    wal = str(tmp_path / "wal.jsonl")
+    svc = BlobSeerService(n_providers=3, n_meta_shards=3,
+                          spool_dir=spool, wal_path=wal)
+    c = svc.client()
+    bid = c.create(psize=16)
+    for i in range(8):
+        c.write(bid, bytes([i + 1]) * 128, 0)  # overwrites: old pages die
+    c.set_retention(bid, keep_last=2)
+    s = collect_garbage(svc)
+    assert s["retired_versions"] == 6 and s["failed_deletes"] == 0
+    assert svc.vm.sweep_pending(bid) == []     # all finalized pre-crash
+
+    svc2 = BlobSeerService.restore(spool, wal, n_providers=3,
+                                   n_meta_shards=3, resweep=False)
+    for p in svc2.pm.all_providers():          # every endpoint down...
+        svc2.kill_provider(p.pid)
+    rs = resweep_after_restore(svc2)           # ...during the resweep
+    assert rs["failed_deletes"] > 0
+    # failed versions are un-finalized (WAL'd): live rounds see them
+    assert svc2.vm.sweep_pending(bid)
+    for p in svc2.pm.all_providers():
+        svc2.revive_provider(p.pid)
+    s2 = collect_garbage(svc2)
+    assert s2["failed_deletes"] == 0
+    assert svc2.vm.sweep_pending(bid) == []    # retried and re-finalized
+    # and the WAL round-trips the unswept records: a third cold start
+    # replays to the same settled state
+    svc3 = BlobSeerService.restore(spool, wal, n_providers=3,
+                                   n_meta_shards=3)
+    assert svc3.vm.sweep_pending(bid) == []
+    with pytest.raises(RetiredVersion):
+        svc3.client().read(bid, 3, 0, 16)
+
+
 def test_restore_never_resurrects_swept_versions(tmp_path):
     """WAL retire records survive a cold restart: swept versions stay
     typed-unreadable and their garbage is re-deleted after rebuild."""
