@@ -1,0 +1,170 @@
+"""Read-path cache hierarchy: RPCs and bytes-on-wire vs cache budget.
+
+Runs the ``hot_set`` scenario (64 simulated readers hammering a small
+hot set of one blob, deterministic virtual time) across page-cache
+budgets, from disabled to default, and reports
+
+* data-plane read RPCs (``provider_read_rounds``) and logical page
+  fetches (``provider_read_pages``),
+* total wire round trips and bytes actually moved,
+* bytes the caches kept off the wire (``wire_local_hit_bytes``),
+* page-cache hit/miss/eviction/single-flight counters,
+
+plus a sequential-reader row showing sibling-page prefetch
+(``read_prefetch_pages``) hiding the next read's data-plane latency.
+
+Perf contract (asserted): at the default budget the 64-reader hot-set
+scenario issues at most HALF the data-plane read RPCs of a cache-free
+run (it is ~16x in practice), and two same-seed runs replay identical
+trace digests (the cache is part of the deterministic schedule, not a
+source of nondeterminism).
+
+Emits ``BENCH_cache.json`` (machine-readable, for the perf trajectory)
+next to the CSV rows.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Reporter, timer
+from repro.core import BlobSeerService
+from repro.core.scenarios import run_scenario
+from repro.core.service import DEFAULT_PAGE_CACHE_BYTES as DEFAULT_BUDGET
+
+N_CLIENTS = 64
+OPS_PER_CLIENT = 4
+SEED = 1
+PSIZE = 64 * 1024
+CHUNK_PAGES = 4
+BUDGETS = (0, 256 * 1024, DEFAULT_BUDGET)
+
+
+def _hot_set_round(budget: int) -> dict:
+    t0 = timer()
+    r = run_scenario(
+        "hot_set", N_CLIENTS, seed=SEED, ops_per_client=OPS_PER_CLIENT,
+        psize=PSIZE, chunk_pages=CHUNK_PAGES, page_cache_bytes=budget,
+    )
+    if r.errors:
+        raise RuntimeError(f"hot_set budget={budget}: {r.errors}")
+    wall = timer() - t0
+    return {
+        "budget_bytes": budget,
+        "n_clients": N_CLIENTS,
+        "ops": r.ops,
+        "read_rpc_rounds": r.rpc["provider_read_rounds"],
+        "read_pages_fetched": r.rpc["provider_read_pages"],
+        "wire_round_trips": r.rpc["wire_round_trips"],
+        "bytes_on_wire": r.bytes_moved,
+        "bytes_saved": r.rpc["wire_local_hit_bytes"],
+        "page_cache_hits": r.rpc["page_cache_hits"],
+        "page_cache_misses": r.rpc["page_cache_misses"],
+        "page_cache_evictions": r.rpc["page_cache_evictions"],
+        "single_flight_waits": r.rpc["page_cache_inflight_waits"],
+        "node_cache_hits": r.rpc["node_cache_hits"],
+        "aggregate_mbps": r.aggregate_mbps,
+        "makespan_s": r.makespan,
+        "trace_digest": r.trace_digest,
+        "wall_seconds": wall,
+    }
+
+
+def _prefetch_round(prefetch_pages: int) -> dict:
+    """One simulated sequential reader: sibling-page prefetch turns the
+    next read's blocking data-plane rounds into fire-and-forget traffic
+    issued a read earlier, so the reader's virtual makespan drops even
+    though the RPC and byte counts stay the same (latency *hiding*, not
+    latency removal)."""
+    from repro.core import Simulator, Wire
+
+    sim = Simulator(seed=SEED)
+    svc = BlobSeerService(n_providers=8, n_meta_shards=4,
+                          wire=Wire(clock=sim),
+                          read_prefetch_pages=prefetch_pages)
+    setup = svc.client("setup")
+    bid = setup.create(psize=PSIZE)
+    chunk = CHUNK_PAGES * PSIZE
+    n_chunks = 16
+    for _ in range(n_chunks):
+        setup.append(bid, b"\x5a" * chunk)
+    v = setup.get_recent(bid)
+    svc.reset_rpc_counters()
+
+    def prog():
+        c = svc.client("seq")
+        for k in range(n_chunks):
+            c.read(bid, v, k * chunk, chunk)
+        return {"ops": n_chunks}
+
+    sim.spawn(prog, name="seq")
+    sim.run()
+    rep = svc.rpc_report()
+    return {
+        "prefetch_pages": prefetch_pages,
+        "reads": n_chunks,
+        "makespan_s": sim.now(),
+        "read_rpc_rounds": rep["provider_read_rounds"],
+        "prefetch_fills": rep["page_cache_prefetch_fills"],
+    }
+
+
+def run(rep: Reporter) -> None:
+    rounds = [_hot_set_round(b) for b in BUDGETS]
+    for r in rounds:
+        rep.add(
+            f"cache_hotset_budget{r['budget_bytes'] // 1024}k",
+            r["wall_seconds"] / max(r["ops"], 1) * 1e6,
+            f"read_rpcs={r['read_rpc_rounds']};"
+            f"pages_fetched={r['read_pages_fetched']};"
+            f"wire_rt={r['wire_round_trips']};"
+            f"hits={r['page_cache_hits']};"
+            f"sf_waits={r['single_flight_waits']};"
+            f"saved={r['bytes_saved'] / 1e6:.1f}MB",
+        )
+
+    base, best = rounds[0], rounds[-1]
+    reduction = base["read_rpc_rounds"] / max(best["read_rpc_rounds"], 1)
+    assert reduction >= 2.0, (
+        f"default cache budget must cut the hot-set data-plane RPCs >= 2x: "
+        f"{base['read_rpc_rounds']} -> {best['read_rpc_rounds']} "
+        f"({reduction:.2f}x)"
+    )
+    # determinism: the cache is part of the schedule, replays are exact
+    again = _hot_set_round(DEFAULT_BUDGET)
+    assert again["trace_digest"] == best["trace_digest"], (
+        "same-seed hot_set runs diverged with the cache enabled"
+    )
+    rep.add("cache_hotset_rpc_reduction", 0.0,
+            f"x{reduction:.1f}_fewer_read_rpcs;replay=identical")
+
+    prefetch = [_prefetch_round(p) for p in (0, CHUNK_PAGES)]
+    for r in prefetch:
+        rep.add(
+            f"cache_prefetch{r['prefetch_pages']}",
+            0.0,
+            f"seq_makespan={r['makespan_s'] * 1e3:.2f}ms;"
+            f"read_rpcs={r['read_rpc_rounds']};"
+            f"prefetch_fills={r['prefetch_fills']}",
+        )
+    assert prefetch[1]["makespan_s"] < prefetch[0]["makespan_s"], (
+        "sibling-page prefetch must shorten the sequential reader's "
+        f"virtual makespan: {prefetch[0]['makespan_s']:.6f}s -> "
+        f"{prefetch[1]['makespan_s']:.6f}s"
+    )
+
+    out = os.path.join(os.getcwd(), "BENCH_cache.json")
+    with open(out, "w") as f:
+        json.dump({
+            "bench": "cache", "scenario": "hot_set", "seed": SEED,
+            "n_clients": N_CLIENTS, "ops_per_client": OPS_PER_CLIENT,
+            "psize": PSIZE, "chunk_pages": CHUNK_PAGES,
+            "rpc_reduction_at_default_budget": reduction,
+            "rounds": rounds, "prefetch": prefetch,
+        }, f, indent=2)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    run(Reporter())

@@ -18,8 +18,12 @@ from repro.core import BlobSeerService
 
 def run(rep: Reporter, *, total_mb: int = 128, chunk_mb: int = 8) -> None:
     n_nodes = 175
+    # page cache OFF: the paper's readers run on 175 *distinct* nodes;
+    # a shared in-process cache would serve the wrapped-around chunks
+    # locally and fake the provider contention this figure measures.
+    # The cached regime has its own benchmark (bench_cache).
     svc = BlobSeerService(n_providers=n_nodes - 2, n_meta_shards=n_nodes - 2,
-                          placement="two_choice")
+                          placement="two_choice", page_cache_bytes=0)
     writer = svc.client("writer")
     bid = writer.create(psize=64 * 1024)
     payload = b"\xcd" * (4 * 1024 * 1024)

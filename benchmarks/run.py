@@ -12,8 +12,8 @@ import sys
 
 from benchmarks.common import Reporter
 
-BENCHES = ["append", "read", "meta", "space", "gc", "ckpt", "kernels",
-           "roofline", "concurrency"]
+BENCHES = ["append", "read", "meta", "space", "gc", "cache", "ckpt",
+           "kernels", "roofline", "concurrency"]
 
 
 def main() -> None:
@@ -31,6 +31,8 @@ def main() -> None:
             from benchmarks import bench_space as m
         elif name == "gc":
             from benchmarks import bench_gc as m
+        elif name == "cache":
+            from benchmarks import bench_cache as m
         elif name == "ckpt":
             from benchmarks import bench_ckpt as m
         elif name == "kernels":

@@ -46,6 +46,15 @@ def main() -> None:
     bob = svc.client("bob")
     print("bob reads v3[20:26] =", bob.read(blob, v3, 20, 6))
 
+    # immutability-aware caching: bob's re-read of alice's range is
+    # served by the shared page cache — zero provider RPCs
+    svc.reset_rpc_counters()
+    bob.read(blob, v3, 16, 10)
+    rep = svc.rpc_report()
+    print(f"cached re-read: provider_read_pages={rep['provider_read_pages']} "
+          f"page_cache_hits={rep['page_cache_hits']}")
+    assert rep["provider_read_pages"] == 0, "expected a pure cache hit"
+
     # storage accounting: versions share all unmodified pages
     print("storage report:", svc.storage_report())
 

@@ -1,11 +1,18 @@
-"""BlobSeer core: the paper's contribution.
+"""BlobSeer core: the paper's contribution, grown toward production.
 
 Versioned, page-striped blob storage with distributed segment-tree
 metadata over a DHT, total-order snapshot publication, and cheap
-branching — per Nicolae, Antoniu & Bougé (DAMAP 2009).
+branching — per Nicolae, Antoniu & Bougé (2009) — plus the
+beyond-paper subsystems this repo has added on top: a batched
+metadata/data request plane, a deterministic virtual-time concurrency
+harness (:class:`Simulator`), concurrent-safe distributed GC with
+typed :class:`RetiredVersion` answers, and an immutability-aware
+read-path cache hierarchy (:class:`NodeCache`/:class:`PageCache`).
+See ARCHITECTURE.md for the deep dives and README.md for the map.
 """
 
 from repro.core.blob import BlobClient, ReadError
+from repro.core.cache import NodeCache, PageCache
 from repro.core.service import BlobSeerService
 from repro.core.sim import Clock, SimDeadlock, Simulator, WallClock
 from repro.core.transport import Wire, EndpointDown
@@ -21,6 +28,8 @@ __all__ = [
     "BlobSeerService",
     "Clock",
     "EndpointDown",
+    "NodeCache",
+    "PageCache",
     "ReadError",
     "RetiredVersion",
     "SimDeadlock",

@@ -25,11 +25,11 @@ from __future__ import annotations
 
 import itertools
 import threading
-from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import segment_tree as st
+from repro.core.cache import NodeCache
 from repro.core.dht import MetadataDHT
 from repro.core.pages import fresh_page_id, pages_spanned
 from repro.core.provider import ProviderManager
@@ -40,92 +40,19 @@ from repro.core.version_manager import (
     owner_fn_for_lineage,
 )
 
+# Backwards-compatible alias: the node cache grew up and moved to
+# repro.core.cache (shared with the page cache and the accounting
+# layer); existing imports keep working.
+_NodeCache = NodeCache
+
 _client_ids = itertools.count()
 _client_ids_lock = threading.Lock()
 
 
 class ReadError(RuntimeError):
-    pass
-
-
-class _NodeCache:
-    """Client-side cache over the metadata DHT.
-
-    Tree nodes are immutable once written (the system never updates
-    metadata in place — the paper's key design choice), so caching is
-    unconditionally safe.  Sequential appends re-descend the same
-    published root for border resolution and repeated reads re-fetch the
-    top tree levels; both become local hits.  Negative lookups are never
-    cached (the node may be written later).
-
-    Bounded LRU: at capacity the oldest entry is evicted, so the hot top
-    levels of the tree stay resident (a clear-all here would stampede
-    every client back to the DHT exactly when the cache is hottest).
-    Batch-aware: ``get_many`` serves hits locally and forwards only the
-    misses to the DHT's batched path.
-    """
-
-    MAX_ENTRIES = 65536
-
-    def __init__(self, dht: MetadataDHT) -> None:
-        self._dht = dht
-        self._cache: "OrderedDict" = OrderedDict()
-        self._lock = threading.Lock()
-        self.hits = 0
-        self.misses = 0
-
-    def _insert(self, key, value) -> None:
-        # caller holds self._lock
-        if key in self._cache:
-            self._cache.move_to_end(key)
-        self._cache[key] = value
-        while len(self._cache) > self.MAX_ENTRIES:
-            self._cache.popitem(last=False)
-
-    def get(self, key, peer=None):
-        with self._lock:
-            if key in self._cache:
-                self.hits += 1
-                self._cache.move_to_end(key)
-                return self._cache[key]
-        value = self._dht.get(key, peer=peer)
-        self.misses += 1
-        if value is not None:
-            with self._lock:
-                self._insert(key, value)
-        return value
-
-    def get_many(self, keys, peer=None):
-        out: Dict = {}
-        missing: List = []
-        with self._lock:
-            for key in dict.fromkeys(keys):
-                if key in self._cache:
-                    self.hits += 1
-                    self._cache.move_to_end(key)
-                    out[key] = self._cache[key]
-                else:
-                    missing.append(key)
-        if missing:
-            fetched = self._dht.get_many(missing, peer=peer)
-            self.misses += len(missing)
-            with self._lock:
-                for key, value in fetched.items():
-                    if value is not None:
-                        self._insert(key, value)
-            out.update(fetched)
-        return out
-
-    def put(self, key, value, peer=None):
-        self._dht.put(key, value, peer=peer)
-        with self._lock:
-            self._insert(key, value)
-
-    def put_many(self, items, peer=None):
-        self._dht.put_many(items, peer=peer)
-        with self._lock:
-            for key, value in items:
-                self._insert(key, value)
+    """A READ failed validation: unpublished version or out-of-bounds
+    range.  (Retired snapshots raise the typed
+    :class:`~repro.core.version_manager.RetiredVersion` instead.)"""
 
 
 class BlobClient:
@@ -140,11 +67,18 @@ class BlobClient:
         wire: Wire,
         name: Optional[str] = None,
         io_workers: int = 0,
+        prefetch_pages: int = 0,
     ) -> None:
+        """``prefetch_pages``: how many sibling pages past a read's range
+        to pull into the shared page cache on the same batched fetch
+        (0 = off).  Sequential readers hide the next read's data-plane
+        latency this way; the descriptors come from widening the same
+        segment-tree descent the read already pays for."""
         self.vm = vm
-        self.dht = _NodeCache(dht)
+        self.dht = NodeCache(dht)
         self.pm = pm
         self.wire = wire
+        self.prefetch_pages = max(0, prefetch_pages)
         if name is None:
             with _client_ids_lock:
                 name = f"client-{next(_client_ids):04d}"
@@ -174,6 +108,7 @@ class BlobClient:
 
     # ---------------------------------------------------------------- CREATE
     def create(self, psize: int = 64 * 1024) -> str:
+        """CREATE: a new empty blob (snapshot 0, size 0); returns its id."""
         return self.vm.create(psize, client=self.name)
 
     # ------------------------------------------------------------------ READ
@@ -199,17 +134,34 @@ class BlobClient:
                 return b""
             psize = self.vm.psize_of(blob_id)
             p0, p1 = pages_spanned(offset, size, psize)
+            # Sibling-page prefetch: widen the descent past p1 so the
+            # NEXT sequential read's pages ride this read's batched
+            # waves into the shared page cache.  The extra leaves cost
+            # keys on the same level-synchronous rounds, not extra
+            # latency waves.  Pointless without a cache to land in —
+            # the widening is skipped then (no metadata-plane waste).
+            p1_want = p1
+            pc = self.pm.page_cache
+            if self.prefetch_pages > 0 and pc is not None and pc.enabled:
+                p1_want = min(p1 + self.prefetch_pages,
+                              -(-total // psize))
             pd = st.read_meta(
                 self.dht, self._owner_fn(blob_id), version,
-                root_pages, p0, p1,
+                root_pages, p0, p1_want,
                 peer=self.name,
             )
-            return self._fetch_ranges(pd, offset, size, psize)
+            return self._fetch_ranges(pd, offset, size, psize,
+                                      prefetch_beyond=p1_want > p1)
         finally:
             self.vm.exit_read(blob_id, version, client=self.name)
 
     def _fetch_ranges(
-        self, pd: Sequence[st.PageDescriptor], offset: int, size: int, psize: int
+        self,
+        pd: Sequence[st.PageDescriptor],
+        offset: int,
+        size: int,
+        psize: int,
+        prefetch_beyond: bool = False,
     ) -> bytes:
         """Fetch the bytes of ``[offset, offset+size)`` from page replicas.
 
@@ -217,21 +169,45 @@ class BlobClient:
         them per provider endpoint (one batched round trip each) instead
         of paying per-page latency — the data-plane mirror of the
         level-batched metadata descent.
+
+        When the shared page cache is enabled, requests are normalized
+        to *whole pages* and sliced locally, so the cache is
+        page-granular: overlapping sub-range reads of one page share a
+        single entry (no budget double-charging), and a prefetched page
+        serves any later read of it — aligned or not.  The standard
+        page-cache tradeoff applies: a small cold read moves its whole
+        page over the wire once (psize bytes) to make every later read
+        of that page free — workloads of tiny *non-repeating* random
+        reads should run with ``page_cache_bytes=0``, which restores
+        exact sub-range fetches (no extra bytes on the wire).
+        With ``prefetch_beyond``, descriptors past the requested range
+        (widened descent) become best-effort whole-page prefetches.
         """
+        pc = self.pm.page_cache
+        whole_pages = prefetch_beyond or (pc is not None and pc.enabled)
         buf = bytearray(size)
         requests: List[Tuple[Sequence[str], str, int, int]] = []
-        spans: List[Tuple[int, int]] = []
+        prefetch: List[Tuple[Sequence[str], str, int, int]] = []
+        spans: List[Tuple[int, int, int]] = []  # (lo, hi, chunk offset)
         for d in pd:
             page_start = d.page_index * psize
             lo = max(offset, page_start)
             hi = min(offset + size, page_start + d.length)
             if hi <= lo:
+                if prefetch_beyond:
+                    prefetch.append((d.providers, d.page_id, 0, d.length))
                 continue
-            requests.append((d.providers, d.page_id, lo - page_start, hi - lo))
-            spans.append((lo, hi))
-        chunks = self.pm.fetch_pages(requests, peer=self.name)
-        for (lo, hi), chunk in zip(spans, chunks):
-            buf[lo - offset : hi - offset] = chunk
+            if whole_pages:
+                requests.append((d.providers, d.page_id, 0, d.length))
+                spans.append((lo, hi, lo - page_start))
+            else:
+                requests.append((d.providers, d.page_id,
+                                 lo - page_start, hi - lo))
+                spans.append((lo, hi, 0))
+        chunks = self.pm.fetch_pages(requests, peer=self.name,
+                                     prefetch=prefetch)
+        for (lo, hi, skip), chunk in zip(spans, chunks):
+            buf[lo - offset : hi - offset] = chunk[skip : skip + (hi - lo)]
         return bytes(buf)
 
     # ------------------------------------------------------------- WRITE/APPEND
@@ -421,15 +397,25 @@ class BlobClient:
 
     # ------------------------------------------------------------- passthrough
     def get_recent(self, blob_id: str) -> int:
+        """GET_RECENT: a recently published, still-live snapshot version
+        (0 for an empty blob; retired versions are never handed out)."""
         return self.vm.get_recent(blob_id, client=self.name)
 
     def get_size(self, blob_id: str, version: int) -> int:
+        """GET_SIZE of a published snapshot; raises
+        :class:`~repro.core.version_manager.VersionUnpublished` /
+        :class:`~repro.core.version_manager.RetiredVersion` otherwise."""
         return self.vm.get_size(blob_id, version, client=self.name)
 
     def sync(self, blob_id: str, version: int, timeout: Optional[float] = None) -> None:
+        """Block (through the deployment clock) until ``version`` is
+        published — read-your-writes for a writer that kept its vw."""
         self.vm.sync(blob_id, version, timeout=timeout, client=self.name)
 
     def branch(self, blob_id: str, version: int) -> str:
+        """BRANCH: fork a new blob whose snapshots ``<= version`` are
+        shared with the parent (zero copying — the paper's cheap
+        branching); returns the new blob id."""
         bid = self.vm.branch(blob_id, version, client=self.name)
         self._lineage_cache.pop(bid, None)
         return bid
@@ -445,6 +431,7 @@ class BlobClient:
         return self.vm.pin(blob_id, version, client=self.name, ttl=ttl)
 
     def unpin(self, lease_id: str) -> None:
+        """Release a pin lease taken with :meth:`pin` (idempotent)."""
         self.vm.unpin(lease_id, client=self.name)
 
     def set_retention(self, blob_id: str, keep_last: int) -> None:

@@ -83,6 +83,7 @@ class MetadataDHT:
         self._ctr_lock = threading.Lock()
         self._counters: Dict[str, int] = {
             "get_keys": 0,        # logical keys requested
+            "get_keys_cached": 0,  # keys served by client node caches, no RPC
             "get_rounds": 0,      # client-visible batched waves (get/get_many calls loop)
             "get_shard_rpcs": 0,  # per-shard round trips actually issued
             "put_keys": 0,
@@ -104,6 +105,13 @@ class MetadataDHT:
         with self._ctr_lock:
             for k in self._counters:
                 self._counters[k] = 0
+
+    def note_cache_hits(self, n: int) -> None:
+        """Client node caches report their hits here, so one
+        ``rpc_counters()`` read shows cache-hit vs RPC accounting for
+        the whole metadata plane (``get_keys`` = keys that DID cross
+        the wire path, ``get_keys_cached`` = keys that did not)."""
+        self._count(get_keys_cached=n)
 
     # -- key placement: static hash, R consecutive shards -----------------------
     def _home_shards(self, key: Hashable) -> List[MetadataShard]:

@@ -41,6 +41,14 @@ Why concurrent readers/writers are safe:
   manager keeps alive while the update is in flight (``vp`` anchors),
   and the nodes it creates carry a version number newer than anything
   retired — never sweep candidates.
+
+Cache coherence: the read-path page cache (``core/cache.py``) is
+evicted twice per round — at retire-*intent* (the ``gc_epoch`` bump
+fires the version manager's GC listeners with the retired versions'
+page ids) and again inside ``ProviderManager.delete_pages`` before the
+first delete RPC, which also dooms in-flight fetches of the doomed
+pages.  A cached page therefore never outlives its sweep; GC itself
+never reads through a cache (``mark_live`` walks ``svc.dht`` raw).
 """
 
 from __future__ import annotations

@@ -14,6 +14,7 @@ import time
 from typing import Dict, List, Optional
 
 from repro.core.blob import BlobClient
+from repro.core.cache import PageCache
 from repro.core.dht import MetadataDHT
 from repro.core.provider import DataProvider, ProviderManager
 from repro.core.sim import Clock
@@ -21,6 +22,12 @@ from repro.core.transport import Wire
 from repro.core.version_manager import VersionManager
 from repro.store.file import FilePageStore
 from repro.store.memory import MemoryPageStore
+
+# Default byte budget of the shared read-path page cache.  Sized so the
+# paper-scale experiments (64 KiB pages, MB-scale hot sets) fit whole,
+# while still exercising eviction in the space benchmarks; pass
+# ``page_cache_bytes=0`` to disable caching entirely.
+DEFAULT_PAGE_CACHE_BYTES = 64 * 1024 * 1024
 
 
 class BlobSeerService:
@@ -41,12 +48,19 @@ class BlobSeerService:
         heartbeat_timeout: float = 5.0,
         io_workers: int = 0,
         clock: Optional[Clock] = None,
+        page_cache_bytes: int = DEFAULT_PAGE_CACHE_BYTES,
+        read_prefetch_pages: int = 0,
     ) -> None:
         """``clock``: scheduling backend for every blocking point in the
         deployment (wall-clock threads by default; pass a
         ``repro.core.sim.Simulator`` for deterministic virtual time).
         Ignored when an explicit ``wire`` is supplied — the wire's
-        clock wins, so a deployment never mixes time sources."""
+        clock wins, so a deployment never mixes time sources.
+
+        ``page_cache_bytes``: byte budget of the shared read-path page
+        cache (0 disables it).  ``read_prefetch_pages``: default
+        sibling-page prefetch depth handed to every client this service
+        creates (see :class:`~repro.core.blob.BlobClient`)."""
         if wire is not None:
             self.wire = wire
         elif clock is not None:
@@ -56,12 +70,18 @@ class BlobSeerService:
         self.clock = self.wire.clock
         self.vm = VersionManager(wire=self.wire, wal_path=wal_path)
         self.dht = MetadataDHT(self.wire, n_meta_shards, replication=meta_replication)
+        self.page_cache = PageCache(page_cache_bytes, clock=self.clock)
         self.pm = ProviderManager(
             self.wire,
             strategy=placement,
             replication=data_replication,
             heartbeat_timeout=heartbeat_timeout,
+            page_cache=self.page_cache,
         )
+        # GC/cache coherence: evict a retired version's pages at
+        # retire-intent time (epoch bump), before any sweep delete.
+        self.vm.add_gc_listener(self._on_retire_intent)
+        self.read_prefetch_pages = read_prefetch_pages
         self.io_workers = io_workers
         self._spool_dir = spool_dir
         self._verify = verify_digests
@@ -80,19 +100,49 @@ class BlobSeerService:
         self.pm.register(prov)
         return prov
 
-    def client(self, name: Optional[str] = None) -> BlobClient:
-        return BlobClient(self.vm, self.dht, self.pm, self.wire, name=name,
-                          io_workers=self.io_workers)
+    def client(self, name: Optional[str] = None,
+               prefetch_pages: Optional[int] = None) -> BlobClient:
+        """A new client process.  ``prefetch_pages`` overrides the
+        deployment's ``read_prefetch_pages`` default for this client.
+        The service keeps no reference to it — clients (and their node
+        caches) die with their owners; their metadata cache hits
+        survive in the deployment counter ``dht_get_keys_cached``."""
+        return BlobClient(
+            self.vm, self.dht, self.pm, self.wire, name=name,
+            io_workers=self.io_workers,
+            prefetch_pages=(self.read_prefetch_pages
+                            if prefetch_pages is None else prefetch_pages),
+        )
+
+    def _on_retire_intent(self, blob_id, versions, epoch, page_ids) -> None:
+        """gc_epoch listener: drop a retired version's pages from the
+        shared page cache the instant the intent lands.
+
+        Deliberately conservative: a retired version's pd may include
+        pages a kept snapshot still shares (the sweep defers those) —
+        they are evicted anyway and cost one refetch if re-read.  The
+        coherence invariant itself is carried by the second hook
+        (``ProviderManager.delete_pages`` invalidates before any delete
+        RPC); this one closes the intent-to-sweep window early and
+        keeps the cache from holding data of versions that already
+        answer ``RetiredVersion``."""
+        self.page_cache.invalidate_pages(page_ids)
 
     # -------------------------------------------------------- failure injection
     def kill_provider(self, pid: str) -> None:
+        """Down an endpoint (failure injection): every RPC to it raises
+        :class:`~repro.core.transport.EndpointDown` until revived."""
         self.wire.set_down(pid, True)
 
     def revive_provider(self, pid: str) -> None:
+        """Bring a downed endpoint back (and refresh its heartbeat so
+        the next sweep does not immediately re-mark it dead)."""
         self.wire.set_down(pid, False)
         self.pm.get(pid).heartbeat()
 
     def make_straggler(self, pid: str, factor: float) -> None:
+        """Make an endpoint ``factor``x slower on the simulated wire
+        (replica racing/balancing then naturally deprioritizes it)."""
         self.wire.set_straggler(pid, factor)
 
     # ---------------------------------------------------- background maintenance
@@ -119,6 +169,8 @@ class BlobSeerService:
         self._monitor.start()
 
     def stop_monitor(self) -> None:
+        """Stop the background maintenance thread started by
+        :meth:`start_monitor` (joins it; safe to call when stopped)."""
         self._monitor_stop.set()
         if self._monitor is not None:
             self._monitor.join(timeout=2.0)
@@ -162,6 +214,10 @@ class BlobSeerService:
             spool_dir=spool_dir, **kwargs,
         )
         svc.vm = VersionManager.recover_from_wal(wal_path, wire=svc.wire)
+        # the recovered manager replaces the one __init__ subscribed to;
+        # re-attach the cache-eviction hook so post-restore GC rounds
+        # keep the page cache coherent
+        svc.vm.add_gc_listener(svc._on_retire_intent)
         agent = svc.client("rebuild-agent")
         for blob_id in list(svc.vm._blobs):
             b = svc.vm._blobs[blob_id]
@@ -205,9 +261,21 @@ class BlobSeerService:
         ``dht_get_shard_rpcs`` the per-shard requests those waves fanned
         out into.  ``provider_read_rounds``/``provider_read_pages`` are
         the data-plane analogue.
+
+        Cache-hit vs RPC accounting: requests served by the read-path
+        caches never count as RPCs.  ``page_cache_*`` exposes the shared
+        page cache's counters; ``node_cache_hits``/``_hit_bytes`` are
+        the deployment-wide metadata-cache hits every client's
+        :class:`~repro.core.cache.NodeCache` reports into
+        ``dht_get_keys_cached`` (deterministic and monotone — the
+        service deliberately keeps no client registry); and
+        ``wire_local_hit_bytes`` is the byte volume page-cache hits
+        kept off the wire (compare with ``storage_report()['wire_bytes']``).
         """
         report: Dict[str, int] = {
             "wire_round_trips": self.wire.total_round_trips(),
+            "wire_local_hits": self.wire.total_local_hits(),
+            "wire_local_hit_bytes": self.wire.total_local_hit_bytes(),
         }
         for k, v in self.dht.rpc_counters().items():
             report[f"dht_{k}"] = v
@@ -215,14 +283,28 @@ class BlobSeerService:
         report["provider_read_pages"] = self.pm.read_pages
         report["provider_sweep_rounds"] = self.pm.sweep_rounds
         report["provider_swept_pages"] = self.pm.swept_pages
+        for k, v in self.page_cache.counters().items():
+            report[f"page_cache_{k}"] = v
+        cached_keys = report["dht_get_keys_cached"]
+        report["node_cache_hits"] = cached_keys
+        report["node_cache_hit_bytes"] = cached_keys * self.dht.node_nbytes
         return report
 
     def reset_rpc_counters(self) -> None:
+        """Zero every RPC/cache counter (cache *contents* are kept —
+        a counter reset brackets a measurement, it must not change the
+        wire schedule).  Per-client ``NodeCache`` counters are the
+        clients' own; the deployment-level view they feed
+        (``dht_get_keys_cached``) is reset here."""
         self.dht.reset_rpc_counters()
         self.pm.reset_counters()
         self.wire.reset_accounting()
+        self.page_cache.reset_counters()
 
     def storage_report(self) -> Dict[str, object]:
+        """Deployment-wide space accounting: provider count, stored page
+        replicas and bytes, metadata keys, and total bytes that crossed
+        the wire (cache hits excluded — see ``rpc_report``)."""
         provs = self.pm.all_providers()
         return {
             "providers": len(provs),

@@ -80,6 +80,8 @@ class Wire:
     _global: threading.Lock = field(default_factory=threading.Lock)
     _sim_clock: float = 0.0
     _round_trips: int = 0
+    _local_hits: int = 0       # requests served from a local cache, no RPC
+    _local_hit_bytes: int = 0  # bytes those hits kept off the wire
 
     # -- endpoint registry ---------------------------------------------------
     def _ep(self, endpoint: str) -> WireStats:
@@ -110,6 +112,7 @@ class Wire:
     def transfer(
         self, endpoint: str, nbytes: int, *, inbound: bool,
         peer: Optional[str] = None, async_peer: bool = False,
+        fire_and_forget: bool = False,
     ) -> float:
         """Account one request moving ``nbytes`` to/from ``endpoint``.
 
@@ -123,11 +126,19 @@ class Wire:
         the *bytes* only — per-request latency overlaps across requests
         and is paid by the remote endpoint, not the issuing NIC.
 
-        Returns the *simulated* seconds the transfer occupied the
-        endpoint.  Raises :class:`EndpointDown` on failed endpoints.
+        ``fire_and_forget`` models a request the issuer does not wait
+        for (cache prefetch): the endpoint queue, byte counters and
+        round-trip count are charged exactly as usual, but the issuing
+        task is **never blocked** — not in virtual time, not by
+        ``sleep_scale``.  The completion instant is still recorded in
+        the endpoint's ``sim_busy_until``, which is how the cache learns
+        when the prefetched bytes "arrive".
 
-        Under a virtual clock the issuing task additionally *blocks in
-        virtual time* until the request completes — the per-endpoint
+        Returns the completion instant ``done_at`` (simulated-clock
+        coordinates).  Raises :class:`EndpointDown` on failed endpoints.
+
+        Under a virtual clock a non-fire-and-forget issuing task
+        *blocks in virtual time* until ``done_at`` — the per-endpoint
         queue stops being mere accounting and becomes the schedule.
         """
         if self._down.get(endpoint, False):
@@ -161,15 +172,17 @@ class Wire:
                 with self._global:
                     start = max(base, pst.sim_busy_until)
                     pst.sim_busy_until = start + peer_cost
-        if virtual:
-            self.clock.sleep_until(done_at)
-        elif self.sleep_scale > 0.0:
-            self.clock.sleep(cost * self.sleep_scale)
-        return cost
+        if not fire_and_forget:
+            if virtual:
+                self.clock.sleep_until(done_at)
+            elif self.sleep_scale > 0.0:
+                self.clock.sleep(cost * self.sleep_scale)
+        return done_at
 
     def transfer_batch(
         self, endpoint: str, sizes: Sequence[int], *, inbound: bool,
         peer: Optional[str] = None, async_peer: bool = True,
+        fire_and_forget: bool = False,
     ) -> float:
         """Account ONE batched request carrying ``len(sizes)`` items.
 
@@ -177,10 +190,11 @@ class Wire:
         bytes — the accounting ``MetadataDHT.put_many`` pioneered, now a
         first-class primitive shared by the batched read plane
         (``get_many``, ``fetch_pages``).  Counts as one round trip.
+        Returns the batch's completion instant (see :meth:`transfer`).
         """
         return self.transfer(
             endpoint, sum(sizes), inbound=inbound, peer=peer,
-            async_peer=async_peer,
+            async_peer=async_peer, fire_and_forget=fire_and_forget,
         )
 
     # -- simulated clock -------------------------------------------------------
@@ -206,6 +220,25 @@ class Wire:
         with self._global:
             return self._round_trips
 
+    # -- cache-hit vs RPC accounting -------------------------------------------
+    def note_local_hit(self, nbytes: int) -> None:
+        """Account a request served from a local cache: zero round trips,
+        zero wire time — ``nbytes`` records what an RPC *would* have
+        moved, so benchmarks can report bytes kept off the wire next to
+        ``total_bytes()``.  Never touches endpoint queues or the clock."""
+        with self._global:
+            self._local_hits += 1
+            self._local_hit_bytes += nbytes
+
+    def total_local_hits(self) -> int:
+        with self._global:
+            return self._local_hits
+
+    def total_local_hit_bytes(self) -> int:
+        """Bytes served from local caches instead of the wire."""
+        with self._global:
+            return self._local_hit_bytes
+
     def reset_accounting(self) -> None:
         with self._global:
             for s in self._stats.values():
@@ -213,3 +246,5 @@ class Wire:
                 s.sim_busy_until = 0.0
             self._sim_clock = 0.0
             self._round_trips = 0
+            self._local_hits = 0
+            self._local_hit_bytes = 0

@@ -63,11 +63,13 @@ def owner_fn_for_lineage(chain: Sequence[Tuple[str, int]]):
 
 
 class BlobUnknown(KeyError):
-    pass
+    """No blob with that id exists at this version manager."""
 
 
 class VersionUnpublished(RuntimeError):
-    pass
+    """The snapshot version is not published (or not even assigned):
+    reads, GET_SIZE and pins of it are rejected — the paper's READ
+    'fails if the version is not published yet'."""
 
 
 class WriteBeyondEnd(ValueError):
@@ -83,6 +85,12 @@ class RetiredVersion(RuntimeError):
 
 @dataclass
 class UpdateRecord:
+    """One assigned update (WRITE/APPEND) in a blob's history: the
+    version manager's journaled source of truth for the update's range,
+    page descriptors (``pd``), completion state and the published
+    anchor ``vp`` its writer resolves border nodes against.  GC derives
+    a retired version's sweep candidates from this record alone."""
+
     version: int
     offset: int            # bytes
     size: int              # bytes written
@@ -112,6 +120,10 @@ class PinLease:
 
 @dataclass
 class BlobRecord:
+    """Per-blob manager state: page size, branch parentage, the update
+    log, publication watermark, and the GC bookkeeping (retention
+    policy, retired/swept sets, ``gc_epoch``)."""
+
     blob_id: str
     psize: int
     parent: Optional[Tuple[str, int]] = None  # (parent blob id, branch version)
@@ -126,6 +138,19 @@ class BlobRecord:
 
 
 class VersionManager:
+    """The system's only global serialization point (paper §3.1): it
+    assigns strictly increasing snapshot versions, keeps the in-flight
+    registry concurrent writers resolve their border sets from, and
+    publishes versions **in order** once their metadata completes.
+
+    Beyond the paper it also owns the durability and GC control planes:
+    every assignment is journaled to a WAL (crashed writers are
+    rebuilt deterministically, the manager itself recovers via
+    :meth:`recover_from_wal`), and retirement state — retention
+    policies, pin leases, read leases/drain barrier, retire-intent and
+    sweep finalization — lives here so that a single critical section
+    decides what GC may reclaim (see ``core/gc.py``)."""
+
     def __init__(self, wire: Optional[Wire] = None, wal_path: Optional[str] = None,
                  clock: Optional[Clock] = None) -> None:
         self.wire = wire
@@ -148,6 +173,12 @@ class VersionManager:
         self._pins: Dict[str, PinLease] = {}
         self._pin_ids = itertools.count(1)
         self._active_reads: Dict[Tuple[str, int], int] = {}
+        # Retire-intent listeners (gc_epoch notifications): fired after
+        # every plan_retirement that retires something, OUTSIDE the
+        # manager lock, with (blob_id, versions, epoch, page_ids).  The
+        # deployment's page cache subscribes so a retired version's
+        # pages are evicted the instant the epoch bumps.
+        self._gc_listeners: List = []
 
     # ------------------------------------------------------------------ utils
     def _charge(self, client: Optional[str]) -> None:
@@ -283,6 +314,7 @@ class VersionManager:
             return self._size_of(blob_id, version)
 
     def psize_of(self, blob_id: str) -> int:
+        """The blob's immutable page size (fixed at CREATE)."""
         with self._lock:
             return self._blob(blob_id).psize
 
@@ -299,6 +331,10 @@ class VersionManager:
                 self._cond.wait(remaining)
 
     def is_published(self, blob_id: str, version: int) -> bool:
+        """Has ``version`` been published (atomically visible)?  True
+        for retired versions too — reads of those get the typed
+        :class:`RetiredVersion` from :meth:`enter_read`, not a
+        'not published' answer."""
         with self._lock:
             return version <= self._blob(blob_id).published
 
@@ -430,6 +466,11 @@ class VersionManager:
 
     # ----------------------------------------------------------- introspection
     def update_log(self, blob_id: str, version: int) -> UpdateRecord:
+        """The journaled :class:`UpdateRecord` of ``version`` (walks
+        branch lineage to the owner blob); raises
+        :class:`VersionUnpublished` for never-assigned versions.
+        Retirement does NOT hide the record — GC itself reads retired
+        records to derive sweep candidates."""
         with self._lock:
             rec = self._record(blob_id, version)
             if rec is None:
@@ -437,6 +478,8 @@ class VersionManager:
             return rec
 
     def root_pages_published(self, blob_id: str, version: int) -> int:
+        """Page span of the snapshot's segment-tree root, for published,
+        non-retired versions (the read path's entry point to the tree)."""
         with self._lock:
             if version > self._blob(blob_id).published:
                 raise VersionUnpublished(f"{blob_id} v{version} not published")
@@ -445,6 +488,7 @@ class VersionManager:
             return self._root_pages_of(blob_id, version)
 
     def known_blobs(self) -> List[str]:
+        """Every blob id this manager has created (branches included)."""
         with self._lock:
             return list(self._blobs)
 
@@ -466,6 +510,8 @@ class VersionManager:
             return lease_id
 
     def unpin(self, lease_id: str, client: Optional[str] = None) -> None:
+        """Release a pin lease (idempotent: unknown/expired ids are
+        no-ops); the snapshot becomes retireable at the next GC plan."""
         self._charge(client)
         with self._lock:
             self._pins.pop(lease_id, None)
@@ -486,6 +532,9 @@ class VersionManager:
         return out
 
     def pinned_versions(self, blob_id: str) -> FrozenSet[int]:
+        """Versions currently protected by unexpired pin leases, keyed
+        by *owner* blob (a pin taken through a branch shows up here on
+        the ancestor that owns the pinned snapshot)."""
         with self._lock:
             return frozenset(self._live_pins(blob_id))
 
@@ -573,10 +622,16 @@ class VersionManager:
                            "keep_last": keep_last})
 
     def gc_epoch(self, blob_id: str) -> int:
+        """Monotone retirement epoch: bumped (and journaled) every time
+        :meth:`plan_retirement` retires at least one version.  Cache
+        layers key their eviction notifications off it (see
+        :meth:`add_gc_listener`)."""
         with self._lock:
             return self._blob(blob_id).gc_epoch
 
     def retired_versions(self, blob_id: str) -> FrozenSet[int]:
+        """Versions under retire-intent on this blob (swept or not):
+        reads/pins/branches of them answer :class:`RetiredVersion`."""
         with self._lock:
             return frozenset(self._blob(blob_id).retired)
 
@@ -645,12 +700,33 @@ class VersionManager:
                         keep.add(r.vp)
             newly = sorted(published - keep - b.retired)
             kept = tuple(sorted(published - set(newly) - b.retired))
+            epoch = b.gc_epoch
+            retired_page_ids: List[str] = []
             if newly:
                 b.retired.update(newly)
                 b.gc_epoch += 1
+                epoch = b.gc_epoch
                 self._journal({"op": "retire", "blob": blob_id,
-                               "versions": newly, "epoch": b.gc_epoch})
-            return kept, tuple(newly)
+                               "versions": newly, "epoch": epoch})
+                for v in newly:
+                    rec = b.updates.get(v)
+                    if rec is not None:
+                        retired_page_ids.extend(pid for pid, *_ in rec.pd)
+        if newly:
+            # Epoch notification outside the lock: listeners (the shared
+            # page cache) may take their own locks; the journal record
+            # above is already durable, so a listener crash cannot lose
+            # the intent.
+            for fn in list(self._gc_listeners):
+                fn(blob_id, tuple(newly), epoch, tuple(retired_page_ids))
+        return kept, tuple(newly)
+
+    def add_gc_listener(self, fn) -> None:
+        """Subscribe ``fn(blob_id, versions, gc_epoch, page_ids)`` to
+        retire-intent (gc_epoch bump) notifications — the cache-eviction
+        hook: a retired version's pages leave the shared page cache at
+        intent time, before any sweep delete goes out."""
+        self._gc_listeners.append(fn)
 
     def sweep_pending(self, blob_id: str) -> List[UpdateRecord]:
         """Retired-but-not-yet-finalized updates, oldest first.  The

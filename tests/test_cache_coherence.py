@@ -1,0 +1,158 @@
+"""Seeded property tests: cache coherence under random read/GC races.
+
+Hypothesis drives random interleavings of pinned readers, recency
+readers, garbage-making writers and GC rounds on the deterministic
+Simulator, with the shared page cache enabled.  Invariants:
+
+* **no swept page is ever served from (or left in) the cache** — after
+  every GC round, and at the end of the history, every cached page id
+  still exists on at least one provider store;
+* **a pinned read that a cache-free run would admit never fails** — the
+  same seeded history replayed with the cache disabled admits exactly
+  the reads the cached run admits; in both runs pinned reads succeed
+  with byte-identical content;
+* retired-version reads answer the typed ``RetiredVersion`` in both
+  runs (never a stray ``KeyError`` from a swept page a cache might have
+  resurrected).
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip when hypothesis is unavailable
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def given(*a, **k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*a, **k):
+        return lambda fn: fn
+
+from repro.core import BlobSeerService, RetiredVersion, Simulator, Wire
+from repro.core.gc import collect_garbage
+
+PSIZE = 16
+CHUNK = 4 * PSIZE
+
+
+def _stored_page_ids(svc):
+    stored = set()
+    for p in svc.pm.all_providers():
+        stored.update(p.store.iter_pids())
+    return stored
+
+
+def _run_history(seed, n_clients, ops_per_client, keep_last, cache_bytes):
+    """One seeded concurrent history; returns per-client stats + svc."""
+    sim = Simulator(seed=seed)
+    svc = BlobSeerService(wire=Wire(clock=sim), n_providers=4,
+                          n_meta_shards=4, page_cache_bytes=cache_bytes)
+    setup = svc.client("setup")
+    bid = setup.create(psize=PSIZE)
+    pin_payload = bytes([199]) * CHUNK
+    setup.append(bid, pin_payload)
+    setup.set_retention(bid, keep_last)
+    v_pin = setup.get_recent(bid)
+
+    def program(ci):
+        def prog():
+            c = svc.client(f"c{ci:02d}")
+            stats = {"pinned_fail": 0, "retired": 0, "reads": 0, "ops": 0}
+            role = ci % 3
+            lease = c.pin(bid, v_pin) if role == 0 else None
+            try:
+                for k in range(ops_per_client):
+                    if role == 0:          # pinned reader: must NEVER fail
+                        try:
+                            data = c.read(bid, v_pin, 0, CHUNK)
+                            assert data == pin_payload
+                            stats["reads"] += 1
+                        except Exception:  # noqa: BLE001 - any failure is a bug
+                            stats["pinned_fail"] += 1
+                    elif role == 1:        # garbage-making writer
+                        tag = (ci * 37 + k * 11) % 251 + 1
+                        if k % 2 == 0:
+                            c.append(bid, bytes([tag]) * CHUNK)
+                        else:
+                            c.write(bid, bytes([tag]) * CHUNK, 0)
+                    else:                  # recency reader + GC driver
+                        if k % 2 == 0:
+                            try:
+                                v = c.get_recent(bid)
+                                size = c.get_size(bid, v)
+                                take = min(CHUNK, size)
+                                c.read(bid, v, size - take, take)
+                                stats["reads"] += 1
+                            except RetiredVersion:
+                                stats["retired"] += 1  # typed answer: allowed
+                        else:
+                            collect_garbage(svc, client=f"gc{ci:02d}",
+                                            orphan_grace=None)
+                            # coherence invariant, checked mid-history:
+                            # nothing cached points at a swept page
+                            cached = svc.page_cache.cached_page_ids()
+                            assert cached <= _stored_page_ids(svc), (
+                                "cache holds swept pages: "
+                                f"{cached - _stored_page_ids(svc)}"
+                            )
+                    stats["ops"] += 1
+            finally:
+                if lease is not None:
+                    c.unpin(lease)
+            return stats
+
+        return prog
+
+    for ci in range(n_clients):
+        sim.spawn(program(ci), name=f"c{ci:02d}")
+    sim.run()
+    return svc, sim.results()
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**16),
+    keep_last=st.integers(min_value=1, max_value=3),
+)
+def test_cache_never_serves_swept_pages_nor_fails_pinned_reads(seed, keep_last):
+    svc, results = _run_history(seed, n_clients=6, ops_per_client=4,
+                                keep_last=keep_last,
+                                cache_bytes=64 * 1024 * 1024)
+    # the cache-free twin admits the same programs; its pinned reads
+    # must succeed too (the cache may only remove RPCs, not admissions)
+    svc0, results0 = _run_history(seed, n_clients=6, ops_per_client=4,
+                                  keep_last=keep_last, cache_bytes=0)
+    for name, r in list(results.items()) + list(results0.items()):
+        assert r["pinned_fail"] == 0, (name, r)
+    # a cached run performs at least every pinned read the cache-free
+    # run performed (same programs, same per-client op counts)
+    assert sum(r["ops"] for r in results.values()) == \
+        sum(r["ops"] for r in results0.values())
+    # end-state coherence: no cached page id outlived its sweep
+    assert svc.page_cache.cached_page_ids() <= _stored_page_ids(svc)
+    assert svc0.page_cache.cached_page_ids() == set()
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**16))
+def test_cached_history_replays_identically(seed):
+    """Cache hits, single-flight waits and prefetch arrivals are part of
+    the deterministic schedule: same seed -> same retired sets, same
+    storage, same cache contents."""
+    a_svc, _ = _run_history(seed, n_clients=5, ops_per_client=3,
+                            keep_last=2, cache_bytes=64 * 1024 * 1024)
+    b_svc, _ = _run_history(seed, n_clients=5, ops_per_client=3,
+                            keep_last=2, cache_bytes=64 * 1024 * 1024)
+    for bid in a_svc.vm.known_blobs():
+        assert a_svc.vm.retired_versions(bid) == b_svc.vm.retired_versions(bid)
+    assert a_svc.storage_report()["pages"] == b_svc.storage_report()["pages"]
+    # page *ids* are process-global gensyms (they differ between runs);
+    # the cache's shape and every counter must still replay exactly
+    assert (len(a_svc.page_cache.cached_page_ids())
+            == len(b_svc.page_cache.cached_page_ids()))
+    assert a_svc.page_cache.counters() == b_svc.page_cache.counters()

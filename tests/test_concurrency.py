@@ -211,7 +211,8 @@ def test_disjoint_writes_schedule_independent(seed):
     contents = []
     for s in (seed % 1009, (seed * 7 + 3) % 1009):
         env = build_env(8, seed=s, n_providers=4, n_meta_shards=2,
-                        psize=512, chunk_pages=2, ops_per_client=2)
+                        psize=512, chunk_pages=2, ops_per_client=2,
+                        scenario="writers")
         spec = SCENARIOS["writers"]
         spec.setup(env)
         for i in range(8):
@@ -233,7 +234,8 @@ def test_append_total_order_any_schedule(seed):
     from repro.core.scenarios import SCENARIOS, build_env
 
     env = build_env(10, seed=seed % 99991, n_providers=4, n_meta_shards=2,
-                    psize=256, chunk_pages=1, ops_per_client=2)
+                    psize=256, chunk_pages=1, ops_per_client=2,
+                    scenario="appenders")
     spec = SCENARIOS["appenders"]
     spec.setup(env)
     for i in range(10):
