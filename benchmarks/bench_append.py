@@ -1,21 +1,41 @@
-"""Paper Fig 2(a): append bandwidth as the blob grows.
+"""Append path benchmarks: paper Fig 2(a) + the scale-out write plane.
 
-A single client appends fixed-size chunks until the blob reaches the
-target size, for page sizes 64 KB / 256 KB and 50 / 175 co-deployed
-data+metadata providers (the paper's two deployments, scaled in total
-bytes for a 1-core container).  Derived bandwidth = chunk bytes over the
-growth of the client endpoint's simulated busy time — the metric the
-paper plots; expect near-flat curves with dips when the page count
-crosses a power of two (one more metadata-tree level per append).
+Part 1 (paper Fig 2a): a single client appends fixed-size chunks until
+the blob reaches the target size, for page sizes 64 KB / 256 KB and
+50 / 175 co-deployed data+metadata providers (the paper's two
+deployments, scaled in total bytes for a 1-core container).  Derived
+bandwidth = chunk bytes over the growth of the client endpoint's
+simulated busy time — the metric the paper plots; expect near-flat
+curves with dips when the page count crosses a power of two (one more
+metadata-tree level per append).
+
+Part 2 (the PR-5 contract, asserted): 64 concurrent simulated appenders
+on the virtual-time harness, per-op ``append`` (the pre-PR client
+behavior, one assign + one complete control RPC per append) vs the
+``append_burst`` scenario (batched ``assign_versions_many`` /
+``metadata_complete_many``).  The gate: at 64 appenders the batched
+write plane must cut version-manager round trips per append at least
+2x (or gain 2x aggregate append throughput), and the burst scenario
+must replay an identical same-seed trace digest.  Emits
+``BENCH_append.json`` next to the CSV rows.
 """
 
 from __future__ import annotations
 
+import json
+import os
+
 from benchmarks.common import Reporter, timer
 from repro.core import BlobSeerService
+from repro.core.scenarios import run_scenario
+
+N_APPENDERS = 64
+OPS_PER_CLIENT = 2
+SEED = 7
 
 
-def run(rep: Reporter, *, total_mb: int = 32, chunk_mb: int = 2) -> None:
+def _fig2a(rep: Reporter, total_mb: int, chunk_mb: int) -> list:
+    rows = []
     for n_providers in (50, 175):
         for psize_kb in (64, 256):
             svc = BlobSeerService(n_providers=n_providers,
@@ -39,3 +59,96 @@ def run(rep: Reporter, *, total_mb: int = 32, chunk_mb: int = 2) -> None:
                 f"sim_bw_min={min(sim_bw):.1f}MBps blob={total_mb}MB "
                 f"meta_nodes={svc.dht.total_keys()}",
             )
+            rows.append({
+                "providers": n_providers, "psize_kb": psize_kb,
+                "blob_mb": total_mb, "sim_bw_first_mbps": sim_bw[0],
+                "sim_bw_last_mbps": sim_bw[-1],
+                "sim_bw_min_mbps": min(sim_bw),
+                "meta_nodes": svc.dht.total_keys(),
+            })
+    return rows
+
+
+def _scale_row(result) -> dict:
+    rpc = result.rpc
+    return {
+        "scenario": result.scenario,
+        "n_clients": result.n_clients,
+        "appends": result.ops,
+        "aggregate_mbps": result.aggregate_mbps,
+        "makespan_s": result.makespan,
+        "vm_ops": rpc["vm_ops"],
+        "vm_round_trips": rpc["vm_round_trips"],
+        "vm_batched_ops": rpc["vm_batched_ops"],
+        "vm_round_trips_per_append": rpc["vm_round_trips"] / result.ops,
+        "wire_round_trips": rpc["wire_round_trips"],
+        "provider_write_rounds": rpc["provider_write_rounds"],
+        "provider_write_pages": rpc["provider_write_pages"],
+        "trace_digest": result.trace_digest,
+    }
+
+
+def _scale_experiment(rep: Reporter) -> dict:
+    base = run_scenario("appenders", N_APPENDERS, seed=SEED,
+                        ops_per_client=OPS_PER_CLIENT * 4)
+    burst = run_scenario("append_burst", N_APPENDERS, seed=SEED,
+                         ops_per_client=OPS_PER_CLIENT)
+    replay = run_scenario("append_burst", N_APPENDERS, seed=SEED,
+                          ops_per_client=OPS_PER_CLIENT)
+
+    digest_match = burst.trace_digest == replay.trace_digest
+    assert digest_match, (
+        f"append_burst same-seed replay diverged: "
+        f"{burst.trace_digest} != {replay.trace_digest}"
+    )
+    assert not base.errors and not burst.errors
+
+    b, s = _scale_row(base), _scale_row(burst)
+    vm_reduction = (b["vm_round_trips_per_append"] /
+                    s["vm_round_trips_per_append"])
+    throughput_gain = s["aggregate_mbps"] / max(b["aggregate_mbps"], 1e-9)
+    # The asserted PR gate: batched writer verbs must amortize the
+    # version manager at least 2x per append at 64 concurrent
+    # appenders (or win 2x aggregate throughput outright).
+    assert vm_reduction >= 2.0 or throughput_gain >= 2.0, (
+        f"write plane gate failed: vm_reduction={vm_reduction:.2f} "
+        f"throughput_gain={throughput_gain:.2f}"
+    )
+
+    rep.add("append_scale_baseline", 0.0,
+            f"n={N_APPENDERS};appends={b['appends']};"
+            f"vm_rpc_per_append={b['vm_round_trips_per_append']:.2f};"
+            f"agg={b['aggregate_mbps']:.1f}MBps")
+    rep.add("append_scale_burst", 0.0,
+            f"n={N_APPENDERS};appends={s['appends']};"
+            f"vm_rpc_per_append={s['vm_round_trips_per_append']:.2f};"
+            f"agg={s['aggregate_mbps']:.1f}MBps;"
+            f"digest_match={digest_match}")
+    rep.add("append_scale_gate", 0.0,
+            f"vm_rpc_reduction_x{vm_reduction:.2f};"
+            f"throughput_x{throughput_gain:.2f};gate>=2.0_passed")
+
+    return {
+        "n_appenders": N_APPENDERS,
+        "seed": SEED,
+        "baseline": b,
+        "burst": s,
+        "vm_rpc_reduction": vm_reduction,
+        "throughput_gain": throughput_gain,
+        "digest_match": digest_match,
+    }
+
+
+def run(rep: Reporter, *, total_mb: int = 32, chunk_mb: int = 2) -> None:
+    fig2a = _fig2a(rep, total_mb, chunk_mb)
+    scale = _scale_experiment(rep)
+
+    out = os.path.join(os.getcwd(), "BENCH_append.json")
+    with open(out, "w") as f:
+        json.dump({"bench": "append", "fig2a": fig2a, "scale": scale},
+                  f, indent=2)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    run(Reporter())

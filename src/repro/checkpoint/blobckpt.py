@@ -10,7 +10,10 @@ tolerance substrate:
   embeddings, cold optimizer slots, the entire model when only the data
   cursor moved — are physically shared between checkpoints via the
   segment tree's copy-on-write weaving (paper §4.3 "efficient use of
-  storage space");
+  storage space").  All dirty runs of one save ride a single
+  ``BlobClient.write_many`` batch: one version per run as before, but
+  one version-manager assignment round trip and one batched completion
+  for the whole save (the scale-out write plane);
 * commit protocol: data pages -> manifest (layout + step + digests +
   pipeline cursor) -> a one-page *commit pointer* holding the manifest
   write's snapshot version.  A restore resolves the pointer and reads
@@ -125,6 +128,12 @@ class BlobCheckpointer:
         pages_total = (total - self.header_bytes) // psz
         manifest_leaves = []
         new_digests: Dict[str, np.ndarray] = {}
+        # dirty page runs across ALL leaves are collected and written as
+        # one write_many batch: one version per run (same snapshots as
+        # one write() per run), but the whole save pays a single
+        # version-manager assignment round trip and a single batched
+        # completion — the scale-out write plane under the checkpointer
+        dirty_writes: List[Tuple[bytes, int]] = []
         for path, leaf in leaves:
             arr = arrays[path]
             off, nbytes = layout[path]
@@ -158,7 +167,7 @@ class BlobCheckpointer:
                 pad = (j - i) * psz - len(chunk)
                 if pad:
                     chunk = chunk + b"\0" * pad
-                self.client.write(self.blob_id, chunk, off + lo)
+                dirty_writes.append((chunk, off + lo))
                 written_bytes += len(chunk)
                 pages_written += j - i
                 i = j
@@ -169,6 +178,9 @@ class BlobCheckpointer:
                 "offset": off,
                 "nbytes": nbytes,
             })
+
+        if dirty_writes:
+            self.client.write_many(self.blob_id, dirty_writes)
 
         manifest = {
             "format": 1,

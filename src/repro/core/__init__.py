@@ -17,6 +17,7 @@ from repro.core.service import BlobSeerService
 from repro.core.sim import Clock, SimDeadlock, Simulator, WallClock
 from repro.core.transport import Wire, EndpointDown
 from repro.core.version_manager import (
+    LineageShard,
     RetiredVersion,
     VersionManager,
     VersionUnpublished,
@@ -28,6 +29,7 @@ __all__ = [
     "BlobSeerService",
     "Clock",
     "EndpointDown",
+    "LineageShard",
     "NodeCache",
     "PageCache",
     "ReadError",

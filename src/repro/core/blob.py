@@ -12,7 +12,15 @@ Concurrency properties (paper §4.3) preserved:
   unpublished updates are resolved from the version-manager-supplied
   registry info, everything else by descending a published tree;
 * the only serialization points are the version-manager critical
-  section (short) and same-endpoint contention.
+  section (short, and per *lineage* — unrelated blobs never contend)
+  and same-endpoint contention.
+
+The write path is pipelined (see docs/write-path.md): page stores go
+out as per-endpoint batches that overlap assignment, border prefetch
+and metadata puts; the border set is prefetched as one level-batched
+cohort; bursts (:meth:`BlobClient.append_many` /
+:meth:`BlobClient.write_many`) amortize the version-manager round
+trips through the batched writer verbs.
 
 Unaligned ranges (the paper's "slightly more complex" §3 case) are fully
 supported: a boundary page whose range is partially overwritten becomes
@@ -25,13 +33,12 @@ from __future__ import annotations
 
 import itertools
 import threading
-from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import segment_tree as st
 from repro.core.cache import NodeCache
 from repro.core.dht import MetadataDHT
-from repro.core.pages import fresh_page_id, pages_spanned
+from repro.core.pages import UpdateExtent, fresh_page_id, pages_spanned
 from repro.core.provider import ProviderManager
 from repro.core.transport import Wire
 from repro.core.version_manager import (
@@ -73,7 +80,11 @@ class BlobClient:
         to pull into the shared page cache on the same batched fetch
         (0 = off).  Sequential readers hide the next read's data-plane
         latency this way; the descriptors come from widening the same
-        segment-tree descent the read already pays for."""
+        segment-tree descent the read already pays for.
+
+        ``io_workers`` is accepted for backward compatibility and
+        ignored: per-endpoint batched (and, under a virtual clock,
+        pipelined) page stores replaced the thread-pool fan-out."""
         self.vm = vm
         self.dht = NodeCache(dht)
         self.pm = pm
@@ -83,21 +94,28 @@ class BlobClient:
             with _client_ids_lock:
                 name = f"client-{next(_client_ids):04d}"
         self.name = name
-        self._pool = ThreadPoolExecutor(max_workers=io_workers) if io_workers > 0 else None
+        # io_workers is accepted for API compatibility but is a NO-OP:
+        # the thread-pool fan-out it once enabled is subsumed by the
+        # batched write plane (`ProviderManager.store_pages` groups all
+        # page stores per endpoint into single round trips, and
+        # pipelines them under a virtual clock), which models the
+        # paper's 'in parallel' loops without real threads.
+        del io_workers
         self._lineage_cache: Dict[str, Tuple[Tuple[str, int], ...]] = {}
 
     # ------------------------------------------------------------- small utils
-    def _parallel(self, fn, items: Sequence) -> List:
-        """'for all ... in parallel do' loops of Algorithms 1 and 2.
+    def _await(self, barrier: float) -> None:
+        """Sleep (in virtual time) to a pipelined store barrier.
 
-        Under a virtual clock the loop is always serial: pool threads
-        are not simulated tasks, and the batched wire paths already
-        collapse per-item latency — the simulation models parallel
-        fan-out through `transfer_batch`, not real threads.
+        Fire-and-forget page stores / metadata puts return their
+        completion instants; the writer must not signal
+        ``metadata_complete`` before the latest of them — a snapshot
+        may never publish before its bytes have arrived.  No-op on the
+        wall backend (those transfers block inline).
         """
-        if self._pool is None or len(items) <= 1 or self.wire.clock.is_virtual:
-            return [fn(x) for x in items]
-        return list(self._pool.map(fn, items))
+        clock = self.wire.clock
+        if barrier > 0.0 and clock.is_virtual and barrier > clock.now():
+            clock.sleep_until(barrier)
 
     def _owner_fn(self, blob_id: str):
         chain = self._lineage_cache.get(blob_id)
@@ -220,6 +238,18 @@ class BlobClient:
         return self._update(blob_id, buf, offset=None)
 
     def _update(self, blob_id: str, buf: bytes, offset: Optional[int]) -> int:
+        """The four-phase pipelined write path (see docs/write-path.md).
+
+        Phase 1 stores every fully covered page *before* version
+        assignment (no synchronization; under a virtual clock the
+        per-endpoint store batches go out fire-and-forget, so they
+        overlap everything that follows).  Phase 2 is the version
+        manager's short critical section.  Phase 3 stores boundary
+        pages (the only phase that can wait on another writer).  Phase
+        4 prefetches the whole border set in one level-batched cohort,
+        weaves the metadata (Algorithm 4), then — after sleeping to the
+        store barrier — publishes.
+        """
         if len(buf) == 0:
             raise ValueError("empty update")
         psize = self.vm.psize_of(blob_id)
@@ -233,11 +263,8 @@ class BlobClient:
         # offset we re-stripe below.
         presumed_offset = offset if offset is not None else 0  # append: relative
         p0_pre, _ = pages_spanned(presumed_offset, size, psize)
-        full_lo = -(-presumed_offset // psize)                      # first fully covered page
-        full_hi = (presumed_offset + size) // psize                 # one past last fully covered
-        self._store_full_pages(
-            buf, presumed_offset, psize, range(full_lo, full_hi), p0_pre, stored
-        )
+        barrier = self._store_full_pages(buf, presumed_offset, psize,
+                                         p0_pre, stored)
         pd_wire = tuple(
             (pid, rel, provs, ln) for rel, (pid, provs, ln) in sorted(stored.items())
         )
@@ -251,15 +278,17 @@ class BlobClient:
         if offset is None and off % psize != 0:
             # Optimistic append striping assumed an aligned offset (always
             # true in the paper's aligned world); restripe at the real one.
+            # The optimistically stored pages become orphans (reclaimed by
+            # the GC inventory pass).
             stored.clear()
-            full_lo = -(-off // psize)
-            full_hi = (off + size) // psize
-            self._store_full_pages(buf, off, psize, range(full_lo, full_hi), info.p0, stored)
+            barrier = max(barrier, self._store_full_pages(buf, off, psize,
+                                                          info.p0, stored))
 
         # -- phase 3: boundary pages (merge with snapshot vw-1 content) --
-        stored_boundary = self._store_boundary_pages(
+        stored_boundary, b3 = self._store_boundary_pages(
             blob_id, buf, off, size, psize, info, stored
         )
+        barrier = max(barrier, b3)
 
         pd_final = tuple(
             (pid, rel, provs, ln) for rel, (pid, provs, ln) in sorted(stored.items())
@@ -268,32 +297,191 @@ class BlobClient:
             self.vm.register_pd(blob_id, vw, pd_final, client=self.name)
 
         # -- phase 4: weave metadata (Algorithm 4), then publish --
-        self._build_and_complete(blob_id, info, pd_final)
+        self._build_and_complete(blob_id, info, pd_final, store_barrier=barrier)
         return vw
 
+    # ------------------------------------------------------- batched updates
+    def append_many(self, blob_id: str, bufs: Sequence[bytes]) -> List[int]:
+        """APPEND a burst of buffers in one batched write-plane pass.
+
+        Semantically identical to ``[self.append(blob_id, b) for b in
+        bufs]`` — one snapshot version per buffer, published in order —
+        but the whole burst pays ONE ``assign_versions_many`` and ONE
+        ``metadata_complete_many`` control round trip, and every
+        buffer's page stores share the same per-endpoint batched waves.
+        Intra-burst boundary merges (unaligned appends) are resolved
+        from the burst's own buffers locally; only the first buffer can
+        ever wait on a pre-burst writer.  Returns the assigned versions
+        in buffer order.
+        """
+        return self._update_many(blob_id, [(buf, None) for buf in bufs])
+
+    def write_many(self, blob_id: str,
+                   items: Sequence[Tuple[bytes, int]]) -> List[int]:
+        """WRITE a batch of ``(buf, offset)`` updates in one pass.
+
+        One snapshot version per item, assigned and published in list
+        order, with the version-manager round trips amortized across
+        the batch exactly like :meth:`append_many` (the checkpoint
+        layer uses this for its dirty-page runs).  Offsets are
+        validated against the batch's own running size — item *k* may
+        extend the blob and item *k+1* may write into the extension.
+        """
+        return self._update_many(blob_id, [(buf, off) for buf, off in items])
+
+    def _update_many(self, blob_id: str,
+                     items: Sequence[Tuple[bytes, Optional[int]]]) -> List[int]:
+        items = list(items)
+        if not items:
+            return []
+        if any(len(buf) == 0 for buf, _off in items):
+            raise ValueError("empty update")
+        is_append = items[0][1] is None
+        if any((off is None) != is_append for _buf, off in items):
+            raise ValueError("mixed append/write batch (split it)")
+        psize = self.vm.psize_of(blob_id)
+        stored: List[Dict[int, Tuple[str, Tuple[str, ...], int]]] = [
+            {} for _ in items
+        ]
+
+        # -- phase 1: optimistic pre-store of every fully covered page --
+        # Appends presume a page-aligned burst base (cumulative offsets
+        # from 0); writes know their offsets exactly.
+        cursor = 0
+        plans: List[Tuple[int, List[Tuple[int, bytes]]]] = []
+        for idx, (buf, off) in enumerate(items):
+            p_off = cursor if is_append else off
+            if is_append:
+                cursor += len(buf)
+            p0_pre, _ = pages_spanned(p_off, len(buf), psize)
+            plans.append((idx, self._plan_full_pages(buf, p_off, psize, p0_pre)))
+        barrier = self._store_planned(plans, stored)
+        pd_wire = [
+            tuple((pid, rel, provs, ln)
+                  for rel, (pid, provs, ln) in sorted(s.items()))
+            for s in stored
+        ]
+
+        # -- phase 2: ONE batched version assignment for the burst --
+        infos = self.vm.assign_versions_many(
+            [(blob_id, None if is_append else off, len(buf), pd_wire[idx])
+             for idx, (buf, off) in enumerate(items)],
+            client=self.name,
+        )
+
+        if is_append and infos[0].offset % psize != 0:
+            # Phase-2 re-stripe: the burst's presumed page-aligned base
+            # was wrong — restripe every buffer at its real offset (the
+            # page *phase* of all presumed offsets was off by the same
+            # amount, so the whole burst restripes together).
+            plans = []
+            for idx, (buf, _off) in enumerate(items):
+                stored[idx].clear()
+                plans.append((idx, self._plan_full_pages(
+                    buf, infos[idx].offset, psize, infos[idx].p0)))
+            barrier = max(barrier, self._store_planned(plans, stored))
+
+        # -- phase 3: boundary pages, intra-batch merges resolved locally --
+        prebatch_size = infos[0].prev_size
+        prebatch_version = infos[0].version - 1
+
+        def make_old_read(idx: int) -> Callable[[int, int], bytes]:
+            def old_read(a: int, b: int) -> bytes:
+                # Content of snapshot v_{idx}-1 over [a, b): pre-batch
+                # bytes below the batch's starting size (the only remote
+                # part — and the only wait, on the pre-batch writer),
+                # overlaid with every earlier buffer in the batch (their
+                # versions are exactly the snapshots between the batch
+                # base and v_idx).
+                out = bytearray(b - a)
+                lo_remote = min(b, prebatch_size)
+                if a < lo_remote and prebatch_version > 0:
+                    self.vm.wait_metadata(blob_id, prebatch_version)
+                    out[0:lo_remote - a] = self._read_unpublished(
+                        blob_id, prebatch_version, a, lo_remote - a,
+                        infos[idx])
+                for j in range(idx):
+                    jbuf = items[j][0]
+                    joff = infos[j].offset
+                    lo, hi = max(a, joff), min(b, joff + len(jbuf))
+                    if hi > lo:
+                        out[lo - a:hi - a] = jbuf[lo - joff:hi - joff]
+                return bytes(out)
+            return old_read
+
+        versions: List[int] = []
+        for idx, (buf, _off) in enumerate(items):
+            info = infos[idx]
+            stored_boundary, b3 = self._store_boundary_pages(
+                blob_id, buf, info.offset, len(buf), psize, info,
+                stored[idx], old_read=make_old_read(idx),
+            )
+            barrier = max(barrier, b3)
+            pd_final = tuple(
+                (pid, rel, provs, ln)
+                for rel, (pid, provs, ln) in sorted(stored[idx].items())
+            )
+            if stored_boundary or pd_final != pd_wire[idx]:
+                self.vm.register_pd(blob_id, info.version, pd_final,
+                                    client=self.name)
+
+            # -- phase 4a: weave each update's metadata (border ranges of
+            # concurrent batch members resolve locally from AssignInfo) --
+            self._build_and_complete(blob_id, info, pd_final, complete=False)
+            versions.append(info.version)
+
+        # -- phase 4b: store barrier, then ONE batched completion --
+        self._await(barrier)
+        self.vm.metadata_complete_many(
+            [(blob_id, v) for v in versions], client=self.name)
+        return versions
+
     # ------------------------------------------------------- update internals
+    def _plan_full_pages(
+        self, buf: bytes, off: int, psize: int, p0: int,
+    ) -> List[Tuple[int, bytes]]:
+        """``(rel_page, payload)`` for every page fully covered by the
+        byte range ``[off, off+len(buf))`` (boundary pages are phase 3's
+        job).  ``p0`` is the update's first touched page."""
+        full_lo = -(-off // psize)                 # first fully covered page
+        full_hi = (off + len(buf)) // psize        # one past last fully covered
+        return [
+            (k - p0, buf[k * psize - off:(k + 1) * psize - off])
+            for k in range(full_lo, full_hi)
+        ]
+
+    def _store_planned(
+        self,
+        plans: Sequence[Tuple[int, List[Tuple[int, bytes]]]],
+        stored: List[Dict[int, Tuple[str, Tuple[str, ...], int]]],
+    ) -> float:
+        """Store many updates' planned pages in one grouped, pipelined
+        ``store_pages`` call; returns the store barrier instant."""
+        flat = [(idx, rel, payload)
+                for idx, plan in plans for rel, payload in plan]
+        if not flat:
+            return 0.0
+        groups = self.pm.allocate(len(flat))
+        puts = [(groups[i], fresh_page_id(), payload)
+                for i, (_idx, _rel, payload) in enumerate(flat)]
+        locations, done_at = self.pm.store_pages(puts, peer=self.name)
+        for (idx, rel, payload), (_g, pid, _p), provs in zip(flat, puts,
+                                                             locations):
+            stored[idx][rel] = (pid, tuple(provs), len(payload))
+        return done_at
+
     def _store_full_pages(
         self,
         buf: bytes,
         off: int,
         psize: int,
-        page_range,
         p0: int,
         stored: Dict[int, Tuple[str, Tuple[str, ...], int]],
-    ) -> None:
-        pages = list(page_range)
-        if not pages:
-            return
-        groups = self.pm.allocate(len(pages))
-
-        def put(i_k):
-            i, k = i_k
-            payload = buf[k * psize - off : (k + 1) * psize - off]
-            pid = fresh_page_id()
-            provs = self.pm.store_page(groups[i], pid, payload, peer=self.name)
-            stored[k - p0] = (pid, tuple(provs), len(payload))
-
-        self._parallel(put, list(enumerate(pages)))
+    ) -> float:
+        """Store every fully covered page of one update (phase 1);
+        returns the pipelined store barrier (0.0 on the wall backend)."""
+        return self._store_planned(
+            [(0, self._plan_full_pages(buf, off, psize, p0))], [stored])
 
     def _store_boundary_pages(
         self,
@@ -304,12 +492,19 @@ class BlobClient:
         psize: int,
         info: AssignInfo,
         stored: Dict[int, Tuple[str, Tuple[str, ...], int]],
-    ) -> bool:
+        old_read: Optional[Callable[[int, int], bytes]] = None,
+    ) -> Tuple[bool, float]:
         """Create merged pages for partially covered boundary pages.
 
-        Returns True if any page was stored here.  Only this path ever
-        waits on the previous writer (its metadata must be complete so
-        the old content is readable) — full-page updates never block.
+        Returns ``(stored_any, barrier)``.  ``old_read(a, b)`` supplies
+        the previous snapshot's bytes over ``[a, b)``; the default reads
+        snapshot ``vw-1`` through the DHT after ``wait_metadata`` — the
+        "only boundary pages ever wait on vw-1" contract: this is the
+        single point in the write path that can block on another
+        writer, and it blocks only when the boundary page actually
+        needs bytes the update does not overwrite.  Batched updates
+        pass an ``old_read`` that serves intra-batch ranges from the
+        batch's own buffers (no wait at all).
         """
         vw = info.version
         end = off + size
@@ -319,35 +514,45 @@ class BlobClient:
         if end % psize != 0 and end // psize not in boundary:
             boundary.append(end // psize)
         if not boundary:
-            return False
+            return False, 0.0
 
         old_size = info.prev_size
-        if any((k * psize < off and old_size > k * psize) or (end < min(old_size, (k + 1) * psize))
-               for k in boundary):
-            # merging needs snapshot vw-1 content
-            if vw - 1 > 0:
-                self.vm.wait_metadata(blob_id, vw - 1)
+        if old_read is None:
+            def old_read(a: int, b: int) -> bytes:
+                # merging needs snapshot vw-1 content: the one wait
+                if vw - 1 > 0:
+                    self.vm.wait_metadata(blob_id, vw - 1)
+                    return self._read_unpublished(blob_id, vw - 1, a, b - a,
+                                                  info)
+                return b"\0" * (b - a)
 
+        puts: List[Tuple[Sequence, str, bytes]] = []
+        metas: List[Tuple[int, int]] = []
         for k in boundary:
             page_start = k * psize
             page_end_new = min((k + 1) * psize, info.new_size)
             length = page_end_new - page_start
             page = bytearray(length)
-            # old content of this page from snapshot vw-1 (if any)
+            # old content of this page from snapshot vw-1, fetched only
+            # when some byte of it survives the overlay (a boundary page
+            # whose old bytes are all overwritten never waits)
             old_hi = min(old_size, page_end_new)
-            if old_hi > page_start and vw - 1 > 0:
-                old = self._read_unpublished(blob_id, vw - 1, page_start, old_hi - page_start,
-                                             info)
-                page[0 : len(old)] = old
+            needs_old = (page_start < off and old_size > page_start) or \
+                        (end < old_hi)
+            if needs_old and old_hi > page_start:
+                old = old_read(page_start, old_hi)
+                page[0:len(old)] = old
             # overlay the new bytes
             lo = max(off, page_start)
             hi = min(end, page_end_new)
-            page[lo - page_start : hi - page_start] = buf[lo - off : hi - off]
-            pid = fresh_page_id()
-            group = self.pm.allocate(1)[0]
-            provs = self.pm.store_page(group, pid, bytes(page), peer=self.name)
+            page[lo - page_start:hi - page_start] = buf[lo - off:hi - off]
+            puts.append((self.pm.allocate(1)[0], fresh_page_id(), bytes(page)))
+            metas.append((k, length))
+        locations, done_at = self.pm.store_pages(puts, peer=self.name)
+        for (_g, pid, _payload), provs, (k, length) in zip(puts, locations,
+                                                           metas):
             stored[k - info.p0] = (pid, tuple(provs), length)
-        return True
+        return True, done_at
 
     def _read_unpublished(
         self, blob_id: str, version: int, offset: int, size: int, info: AssignInfo
@@ -363,7 +568,20 @@ class BlobClient:
         )
         return self._fetch_ranges(pd, offset, size, psize)
 
-    def _build_and_complete(self, blob_id: str, info: AssignInfo, pd_final) -> None:
+    def _build_and_complete(self, blob_id: str, info: AssignInfo, pd_final,
+                            store_barrier: float = 0.0,
+                            complete: bool = True) -> None:
+        """Phase 4: prefetch the border set, weave, publish.
+
+        The :class:`AssignInfo` carries the full border context, so the
+        entire border set (``st.border_ranges``) is resolved upfront as
+        ONE level-batched ``resolve_many`` cohort — BUILD_META's
+        per-level lookups then hit the resolver cache and the weave
+        itself issues only its ``put_many`` node writes.  The writer
+        sleeps to ``store_barrier`` (pipelined page stores) before
+        signalling completion; with ``complete=False`` the caller
+        batches the completion itself (``metadata_complete_many``).
+        """
         leaves = [
             st.PageDescriptor(info.p0 + rel, pid, tuple(provs), ln)
             for (pid, rel, provs, ln) in pd_final
@@ -372,11 +590,15 @@ class BlobClient:
             self.dht, self._owner_fn(blob_id), info.recent_updates,
             info.vp, info.vp_root_pages, peer=self.name,
         )
+        border.prefetch(st.border_ranges(
+            UpdateExtent(info.p0, info.p1, info.root_pages)))
         st.build_meta(
             self.dht, self._owner_fn(blob_id), info.version, info.root_pages,
             leaves, border, peer=self.name,
         )
-        self.vm.metadata_complete(blob_id, info.version, client=self.name)
+        self._await(store_barrier)
+        if complete:
+            self.vm.metadata_complete(blob_id, info.version, client=self.name)
 
     # ------------------------------------------------- recovery (beyond paper)
     def rebuild_metadata(self, blob_id: str, version: int) -> None:

@@ -150,10 +150,11 @@ class NodeCache:
             self._insert(key, value)
 
     def put_many(self, items, peer=None):
-        self._dht.put_many(items, peer=peer)
+        done_at = self._dht.put_many(items, peer=peer)
         with self._lock:
             for key, value in items:
                 self._insert(key, value)
+        return done_at
 
 
 class PageCache:

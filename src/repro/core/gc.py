@@ -13,7 +13,11 @@ delete crosses the :class:`~repro.core.transport.Wire` and shows up in
    pin leases, branch roots and in-flight writers' border anchors; mark
    retire-*intent* and journal it to the WAL.  From this instant
    readers/pinners/branchers of a retired version get a typed
-   :class:`~repro.core.version_manager.RetiredVersion`.
+   :class:`~repro.core.version_manager.RetiredVersion`.  With the
+   sharded write plane every keep rule is an intra-lineage fact
+   (branches share their ancestor's shard), so each blob's plan runs
+   under its own lineage lock and scans only that lineage — a GC round
+   never stalls writers of unrelated blobs.
 2. **drain** (epoch barrier): wait until every read lease opened on a
    retired version *before* the intent has been released.  Reads of
    kept versions are never blocked — their safety comes from marking.

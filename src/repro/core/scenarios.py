@@ -206,6 +206,40 @@ def _mixed_program(env: ScenarioEnv, i: int):
     return prog
 
 
+def _setup_multi_blob(env: ScenarioEnv) -> None:
+    """Several independent blobs (one lineage shard each): the ingest
+    swarm spreads bursts over them, so version-manager contention is
+    per lineage, never global."""
+    c = env.client("setup")
+    n_blobs = max(2, min(8, env.n_clients // 8 or 2))
+    env.state["blobs"] = [c.create(psize=env.psize) for _ in range(n_blobs)]
+
+
+BURST = 4  # appends per append_many burst in the append_burst scenario
+
+
+def _append_burst_program(env: ScenarioEnv, i: int):
+    """Multi-blob ingest: each client APPENDs bursts of ``BURST`` chunks
+    via ``append_many``, cycling over the deployment's blobs.  One
+    burst pays one ``assign_versions_many`` + one
+    ``metadata_complete_many`` control round trip — the write-plane
+    amortization ``bench_append`` gates on — and bursts to different
+    blobs publish on independent lineage shards."""
+
+    def prog() -> dict:
+        blobs = env.state["blobs"]
+        c = env.client(f"b{i:03d}")
+        payload = bytes([i % 251 + 1]) * env.chunk
+        versions: List[int] = []
+        for k in range(env.ops_per_client):
+            bid = blobs[(i + k) % len(blobs)]
+            versions.extend(c.append_many(bid, [payload] * BURST))
+        return {"ops": len(versions), "bytes": len(versions) * env.chunk,
+                "versions": versions}
+
+    return prog
+
+
 def _setup_hot_set(env: ScenarioEnv) -> None:
     """Small preloaded blob every reader hammers: the shared page cache
     and single-flight de-duplication are what keep the providers idle."""
@@ -359,6 +393,13 @@ SCENARIOS: Dict[str, Scenario] = {
         "mixed",
         "N/2 readers of recent snapshots + N/2 appenders (paper §5 R/W)",
         _setup_preloaded, _mixed_program,
+        env_defaults={"page_cache_bytes": 0},
+    ),
+    "append_burst": Scenario(
+        "append_burst",
+        "N clients ingesting multi-blob append bursts through the "
+        "batched writer verbs (scale-out write plane)",
+        _setup_multi_blob, _append_burst_program,
         env_defaults={"page_cache_bytes": 0},
     ),
     "hot_set": Scenario(

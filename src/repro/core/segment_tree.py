@@ -31,7 +31,13 @@ from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.dht import MetadataDHT
-from repro.core.pages import intersects, node_children
+from repro.core.pages import (
+    UpdateExtent,
+    intersects,
+    iter_created_nodes,
+    node_children,
+    node_parent,
+)
 
 # A node key in the DHT: (owner_blob_id, version, page_offset, page_size).
 NodeKey = Tuple[str, int, int, int]
@@ -141,6 +147,34 @@ def read_meta(
 # ---------------------------------------------------------------------------
 
 
+def border_ranges(extent: UpdateExtent) -> List[Tuple[int, int]]:
+    """Every border range BUILD_META will ask a resolver for, upfront.
+
+    An update creates exactly the tree nodes whose range intersects its
+    page extent (``pages.iter_created_nodes``); the *border set* is the
+    sibling range of every created node whose sibling the update does
+    NOT create.  Both facts are pure tree-shape math on
+    ``(p0, p1, root_pages)`` — no DHT traffic — which is why the
+    version manager's :class:`~repro.core.version_manager.AssignInfo`
+    is enough context for a writer to call
+    :meth:`BorderResolver.prefetch` on this set *before* the weave
+    starts: all levels' border descents then run as ONE level-batched
+    ``resolve_many`` cohort (≤ depth waves total) instead of one cohort
+    per tree level, and ``build_meta``'s own lookups become pure cache
+    hits.
+    """
+    out: List[Tuple[int, int]] = []
+    for off, size in iter_created_nodes(extent):
+        if size >= extent.root_pages:
+            continue  # the root has no sibling
+        p_off, p_size, is_left = node_parent(off, size)
+        (lo, ls), (ro, rs) = node_children(p_off, p_size)
+        sib = (ro, rs) if is_left else (lo, ls)
+        if not extent.creates_node(*sib):
+            out.append(sib)
+    return list(dict.fromkeys(out))
+
+
 _DESCEND = object()  # sentinel: border range needs a published-tree descent
 
 
@@ -151,10 +185,19 @@ class BorderResolver:
     — published or not by now — as ``(version, p0, p1)``, newest first.
     This is exactly the information the version manager registers at
     version-assignment time (paper §4.2: the VM "will build the partial
-    set of border nodes and provide it to the writer").
+    set of border nodes and provide it to the writer"); ranges touched
+    by it resolve locally with zero DHT traffic, which is also what
+    makes burst writers (``BlobClient.append_many``) weave against
+    their own in-flight versions for free.
 
     ``vp``/``vp_root_pages``: a recently published snapshot used to
     resolve all remaining border ranges by descending its tree.
+    Descents are level-batched and shared across the cohort
+    (:meth:`resolve_many`); the pipelined write path calls
+    :meth:`prefetch` with :func:`border_ranges` so the whole update's
+    border set costs ≤ tree-depth batched waves, resolved before
+    BUILD_META starts.  Results are cached for the resolver's lifetime
+    (one update), so repeated lookups are free.
     """
 
     def __init__(
@@ -181,6 +224,20 @@ class BorderResolver:
         range; ``None`` if the range was never written.
         """
         return self.resolve_many([(off, size)])[(off, size)]
+
+    def prefetch(self, ranges: Sequence[Tuple[int, int]]) -> None:
+        """Warm the resolver for every range BUILD_META will need.
+
+        ``ranges`` is normally :func:`border_ranges` of the update's
+        extent — computable from the :class:`AssignInfo` alone, before
+        any page store or metadata put.  All published-tree descents
+        run as one level-batched :meth:`resolve_many` cohort (shared
+        ``get_many`` waves, ≤ tree depth rounds for the *entire* border
+        set), after which ``build_meta``'s per-level lookups are pure
+        cache hits — the weave pays zero border round trips of its own.
+        """
+        if ranges:
+            self.resolve_many(ranges)
 
     def resolve_many(
         self, ranges: Sequence[Tuple[int, int]]
@@ -285,9 +342,13 @@ def build_meta(
     ``vw`` and the other child to the version resolved by ``border``.
     Each level first *collects* every unresolved border range and hands
     them to ``border.resolve_many`` as one cohort (shared batched
-    descents), instead of one serial descent per border node.  All nodes
-    are then written to the DHT in one ``put_many`` (the paper writes
-    them in parallel; the DHT layer accounts wire cost per shard).
+    descents), instead of one serial descent per border node; a caller
+    that already ran ``border.prefetch(border_ranges(extent))`` (the
+    pipelined write path — see ``BlobClient._update``) pays zero border
+    round trips here, because every per-level cohort hits the
+    resolver's cache.  All nodes are then written to the DHT in one
+    ``put_many`` (the paper writes them in parallel; under a virtual
+    clock the per-shard batches genuinely overlap).
     """
     if not leaves:
         raise ValueError("update with no pages")

@@ -19,7 +19,7 @@ from repro.core.dht import MetadataDHT
 from repro.core.provider import DataProvider, ProviderManager
 from repro.core.sim import Clock
 from repro.core.transport import Wire
-from repro.core.version_manager import VersionManager
+from repro.core.version_manager import VersionManager, VersionUnpublished
 from repro.store.file import FilePageStore
 from repro.store.memory import MemoryPageStore
 
@@ -219,11 +219,14 @@ class BlobSeerService:
         # keep the page cache coherent
         svc.vm.add_gc_listener(svc._on_retire_intent)
         agent = svc.client("rebuild-agent")
-        for blob_id in list(svc.vm._blobs):
-            b = svc.vm._blobs[blob_id]
-            for v in range(b.base_version + 1, b.last_assigned + 1):
-                rec = b.updates.get(v)
-                if rec is None or not rec.complete:
+        for blob_id in svc.vm.known_blobs():
+            base, last = svc.vm.version_bounds(blob_id)
+            for v in range(base + 1, last + 1):
+                try:
+                    rec = svc.vm.update_log(blob_id, v)
+                except VersionUnpublished:
+                    continue  # never assigned; anything else fails loudly
+                if not rec.complete:
                     continue
                 info = svc.vm.assign_info_for_recovery(blob_id, v)
                 # replay strictly in order: border nodes resolve against
@@ -260,7 +263,18 @@ class BlobSeerService:
         number of batched latency waves actually paid, and
         ``dht_get_shard_rpcs`` the per-shard requests those waves fanned
         out into.  ``provider_read_rounds``/``provider_read_pages`` are
-        the data-plane analogue.
+        the data-plane analogue, and
+        ``provider_write_rounds``/``provider_write_pages`` the
+        write-side mirror (page-replica stores vs batched per-endpoint
+        store round trips).
+
+        ``vm_*`` exposes the version-manager control plane:
+        ``vm_ops`` logical verbs, ``vm_round_trips`` control RPCs
+        actually paid (a batched ``assign_versions_many`` /
+        ``metadata_complete_many`` counts once — ``vm_ops /
+        vm_round_trips`` is the write plane's amortization factor),
+        ``vm_batched_ops`` the verbs that rode batches, plus per-verb
+        batch counts.
 
         Cache-hit vs RPC accounting: requests served by the read-path
         caches never count as RPCs.  ``page_cache_*`` exposes the shared
@@ -279,10 +293,14 @@ class BlobSeerService:
         }
         for k, v in self.dht.rpc_counters().items():
             report[f"dht_{k}"] = v
+        for k, v in self.vm.rpc_counters().items():
+            report[f"vm_{k}"] = v
         report["provider_read_rounds"] = self.pm.read_rounds
         report["provider_read_pages"] = self.pm.read_pages
         report["provider_sweep_rounds"] = self.pm.sweep_rounds
         report["provider_swept_pages"] = self.pm.swept_pages
+        report["provider_write_rounds"] = self.pm.write_rounds
+        report["provider_write_pages"] = self.pm.write_pages
         for k, v in self.page_cache.counters().items():
             report[f"page_cache_{k}"] = v
         cached_keys = report["dht_get_keys_cached"]
@@ -297,6 +315,7 @@ class BlobSeerService:
         clients' own; the deployment-level view they feed
         (``dht_get_keys_cached``) is reset here."""
         self.dht.reset_rpc_counters()
+        self.vm.reset_rpc_counters()
         self.pm.reset_counters()
         self.wire.reset_accounting()
         self.page_cache.reset_counters()

@@ -45,6 +45,18 @@ DELETE_NODE_KEY_BYTES = 40  # one metadata-node key in a batched delete
 DELETE_PAGE_CMD_BYTES = 24  # one page-id in a batched page delete
 LIST_PAGE_ENTRY_BYTES = 28  # one (page id, stored-at) entry in an inventory
 
+# Wire-cost model of the version-manager control plane.  Singleton verbs
+# (GET_RECENT, SYNC, a lone assign, ...) each pay one latency charge plus
+# VM_CTRL_MSG_BYTES.  The batched writer verbs of the scale-out write
+# plane — `VersionManager.assign_versions_many` and
+# `metadata_complete_many` — pay ONE latency charge for the whole batch
+# plus a per-item framing cost below, which is what lets an appender
+# swarm amortize version-manager round trips the way `get_many`
+# amortized metadata reads.
+VM_CTRL_MSG_BYTES = 96      # one singleton control-plane verb
+VM_ASSIGN_REQ_BYTES = 128   # one request inside assign_versions_many
+VM_COMPLETE_CMD_BYTES = 48  # one command inside metadata_complete_many
+
 
 @dataclass
 class WireStats:

@@ -1,4 +1,4 @@
-"""The version manager (paper §3.1, §4.2, §4.3).
+"""The version manager (paper §3.1, §4.2, §4.3) — sharded by lineage.
 
 "The version manager is the key actor of the system.  It registers
 update requests (APPEND and WRITE), assigning snapshot version numbers,
@@ -19,6 +19,25 @@ Responsibilities implemented here, faithfully:
   being fully resolvable (atomicity in the sense of [9]);
 * serve GET_RECENT / GET_SIZE / SYNC.
 
+Scale-out write plane (beyond paper; the paper calls the version
+manager the potential bottleneck):
+
+* manager state is **partitioned into per-lineage shards** — one
+  :class:`LineageShard` per CREATE-rooted branch family, each with its
+  own lock and publication condition.  The ordering guarantee the paper
+  needs is *per blob*, so nothing is lost: versions of one blob still
+  publish strictly in order, but a slow writer on blob A never holds
+  any lock or condition a writer/reader of blob B touches.  Branches
+  share their ancestor's shard because every cross-blob rule
+  (branch-root pinning, inherited-version ownership, in-flight ``vp``
+  anchors) stays inside one lineage by construction;
+* **batched writer verbs** — :meth:`VersionManager.assign_versions_many`
+  and :meth:`VersionManager.metadata_complete_many` carry many updates
+  in ONE control round trip (costed per item in ``transport.py``), the
+  write-plane mirror of the read plane's ``get_many``.  Per-verb
+  counters are exposed through :meth:`rpc_counters` and show up in
+  ``service.rpc_report()`` as ``vm_*``.
+
 Beyond-paper (the paper defers failure handling):
 
 * every version assignment is journaled to a write-ahead log together
@@ -28,6 +47,10 @@ Beyond-paper (the paper defers failure handling):
   ``BlobClient.rebuild_metadata``) instead of stalling the publication
   pipeline forever;
 * the version manager itself recovers its full state from the WAL.
+  Every WAL record carries its **lineage id**, so a recovered manager
+  rebuilds the same shard layout; records of different lineages commute
+  (the journal only promises order *within* a lineage, which is exactly
+  what each shard's lock serializes).
 """
 
 from __future__ import annotations
@@ -41,10 +64,15 @@ from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Set, Tup
 
 from repro.core.pages import pages_spanned, root_pages_for
 from repro.core.sim import Clock, WallClock
-from repro.core.transport import Wire
+from repro.core.transport import (
+    VM_ASSIGN_REQ_BYTES,
+    VM_COMPLETE_CMD_BYTES,
+    VM_CTRL_MSG_BYTES,
+    Wire,
+)
 
 VMGR_ENDPOINT = "vmgr"
-_CTRL_MSG_BYTES = 96  # wire-cost estimate of one control-plane RPC
+_CTRL_MSG_BYTES = VM_CTRL_MSG_BYTES  # wire-cost estimate of one control RPC
 
 
 def owner_fn_for_lineage(chain: Sequence[Tuple[str, int]]):
@@ -135,13 +163,48 @@ class BlobRecord:
     retired: Set[int] = field(default_factory=set)  # retire-intent: reads rejected
     swept: Set[int] = field(default_factory=set)    # sweep finalized
     gc_epoch: int = 0                         # bumped at every retire-intent
+    lineage_id: str = ""                      # shard key (root blob of the family)
+
+
+class LineageShard:
+    """One partition of the version manager's state: a CREATE-rooted
+    blob plus every branch forked (transitively) from it.
+
+    Each shard owns its blobs' records, read-lease counts, an RLock and
+    a clock-bound condition for SYNC / publication / drain waits.  Every
+    per-blob verb takes exactly this one lock, so the only writers that
+    ever contend on a version-manager critical section are writers of
+    the *same lineage* — publication on blob B proceeds even while a
+    task holds blob A's shard lock (see ``tests/test_write_plane.py``).
+
+    Branches join their ancestor's shard: inherited-version ownership,
+    branch-root retention and in-flight ``vp`` anchors are then all
+    intra-shard facts, which is what lets :meth:`VersionManager.\
+plan_retirement` run under a single shard lock.
+    """
+
+    __slots__ = ("lineage_id", "lock", "cond", "blobs", "active_reads")
+
+    def __init__(self, lineage_id: str, clock: Clock) -> None:
+        self.lineage_id = lineage_id
+        self.lock = threading.RLock()
+        # SYNC / publication / drain waits block through the clock:
+        # real threading.Condition on the wall backend, virtual-time
+        # waits under a Simulator.
+        self.cond = clock.condition(self.lock)
+        self.blobs: Dict[str, BlobRecord] = {}
+        # in-flight read counts per (owner blob, version), for the GC
+        # sweep's drain barrier
+        self.active_reads: Dict[Tuple[str, int], int] = {}
 
 
 class VersionManager:
-    """The system's only global serialization point (paper §3.1): it
-    assigns strictly increasing snapshot versions, keeps the in-flight
-    registry concurrent writers resolve their border sets from, and
-    publishes versions **in order** once their metadata completes.
+    """The system's serialization point (paper §3.1), sharded by
+    lineage: it assigns strictly increasing snapshot versions per blob,
+    keeps the in-flight registry concurrent writers resolve their
+    border sets from, and publishes each blob's versions **in order**
+    once their metadata completes.  The critical section is per
+    lineage (:class:`LineageShard`), so unrelated blobs never contend.
 
     Beyond the paper it also owns the durability and GC control planes:
     every assignment is journaled to a WAL (crashed writers are
@@ -149,7 +212,7 @@ class VersionManager:
     :meth:`recover_from_wal`), and retirement state — retention
     policies, pin leases, read leases/drain barrier, retire-intent and
     sweep finalization — lives here so that a single critical section
-    decides what GC may reclaim (see ``core/gc.py``)."""
+    per lineage decides what GC may reclaim (see ``core/gc.py``)."""
 
     def __init__(self, wire: Optional[Wire] = None, wal_path: Optional[str] = None,
                  clock: Optional[Clock] = None) -> None:
@@ -157,76 +220,157 @@ class VersionManager:
         if clock is None:
             clock = wire.clock if wire is not None else WallClock()
         self._clock = clock
-        self._blobs: Dict[str, BlobRecord] = {}
-        self._lock = threading.RLock()
-        # SYNC / publication waits block through the clock: real
-        # threading.Condition on the wall backend, virtual-time waits
-        # under a Simulator.
-        self._cond = clock.condition(self._lock)
+        # Lineage registry: blob id -> lineage id -> shard.  The
+        # registry lock guards only these maps and the id counter; it
+        # is never held across a shard operation (lock order:
+        # shard lock > registry/pins/WAL/counter locks, one shard lock
+        # at a time — cross-lineage iteration visits shards serially).
+        self._registry_lock = threading.Lock()
+        self._shards: Dict[str, LineageShard] = {}
+        self._lineage_of: Dict[str, str] = {}
+        self._blob_order: List[str] = []   # global creation order
         self._ids = itertools.count(1)
+        self._wal_lock = threading.Lock()
         self._wal: List[dict] = []
         self._wal_path = wal_path
         self._wal_file = open(wal_path, "a") if wal_path else None
         # GC state: pin leases (volatile — leases die with the manager,
-        # recovery falls back to retention), and in-flight read counts
-        # per (owner blob, version) for the sweep's drain barrier.
+        # recovery falls back to retention).
+        self._pins_lock = threading.Lock()
         self._pins: Dict[str, PinLease] = {}
         self._pin_ids = itertools.count(1)
-        self._active_reads: Dict[Tuple[str, int], int] = {}
         # Retire-intent listeners (gc_epoch notifications): fired after
         # every plan_retirement that retires something, OUTSIDE the
-        # manager lock, with (blob_id, versions, epoch, page_ids).  The
+        # shard lock, with (blob_id, versions, epoch, page_ids).  The
         # deployment's page cache subscribes so a retired version's
         # pages are evicted the instant the epoch bumps.
         self._gc_listeners: List = []
+        # Control-plane accounting (see rpc_counters / rpc_report):
+        # ops = logical verbs, round_trips = RPCs actually paid,
+        # batched_ops = verbs that rode a batched RPC.
+        self._ctr_lock = threading.Lock()
+        self._counters: Dict[str, int] = {
+            "ops": 0,
+            "round_trips": 0,
+            "batched_ops": 0,
+            "assign_batches": 0,
+            "complete_batches": 0,
+        }
 
     # ------------------------------------------------------------------ utils
     def _charge(self, client: Optional[str]) -> None:
+        """Account one singleton control-plane verb."""
+        with self._ctr_lock:
+            self._counters["ops"] += 1
+            self._counters["round_trips"] += 1
         if self.wire is not None:
             self.wire.transfer(VMGR_ENDPOINT, _CTRL_MSG_BYTES, inbound=True, peer=client)
 
-    def _journal(self, rec: dict) -> None:
-        self._wal.append(rec)
-        if self._wal_file is not None:
-            self._wal_file.write(json.dumps(rec) + "\n")
-            self._wal_file.flush()
+    def _charge_batch(self, n_items: int, item_bytes: int, kind: str,
+                      client: Optional[str]) -> None:
+        """Account one batched control RPC carrying ``n_items`` verbs."""
+        with self._ctr_lock:
+            self._counters["ops"] += n_items
+            self._counters["batched_ops"] += n_items
+            self._counters["round_trips"] += 1
+            self._counters[f"{kind}_batches"] += 1
+        if self.wire is not None:
+            self.wire.transfer_batch(VMGR_ENDPOINT, [item_bytes] * n_items,
+                                     inbound=True, peer=client)
 
-    def _blob(self, blob_id: str) -> BlobRecord:
+    def rpc_counters(self) -> Dict[str, int]:
+        """Control-plane accounting: ``ops`` (logical verbs),
+        ``round_trips`` (control RPCs actually paid — a batched verb
+        counts once), ``batched_ops`` (verbs that rode a batch), and
+        per-verb batch counts.  ``ops / round_trips`` is the write
+        plane's amortization factor; ``service.rpc_report()`` surfaces
+        these as ``vm_*``."""
+        with self._ctr_lock:
+            return dict(self._counters)
+
+    def reset_rpc_counters(self) -> None:
+        with self._ctr_lock:
+            for k in self._counters:
+                self._counters[k] = 0
+
+    def _journal(self, lineage_id: str, rec: dict) -> None:
+        """Append one WAL record (stamped with its lineage id).
+
+        Called while holding the lineage's shard lock, so the journal
+        order of any single lineage matches its state-mutation order;
+        records of different lineages may interleave freely — they
+        reference disjoint state, so replay commutes across lineages.
+        """
+        rec = dict(rec)
+        rec["lineage"] = lineage_id
+        with self._wal_lock:
+            self._wal.append(rec)
+            if self._wal_file is not None:
+                self._wal_file.write(json.dumps(rec) + "\n")
+                self._wal_file.flush()
+
+    def _shard_of(self, blob_id: str) -> LineageShard:
+        with self._registry_lock:
+            lid = self._lineage_of.get(blob_id)
+            if lid is None:
+                raise BlobUnknown(blob_id)
+            return self._shards[lid]
+
+    def _all_shards(self) -> List[LineageShard]:
+        """Every shard, in lineage-creation order (deterministic)."""
+        with self._registry_lock:
+            return [self._shards[lid] for lid in sorted(self._shards)]
+
+    def lineage_id(self, blob_id: str) -> str:
+        """The shard key of ``blob_id``'s lineage: the root blob the
+        family was CREATEd as.  Blobs with different lineage ids share
+        no version-manager lock — publication on one can never wait on
+        the other (the write plane's independence contract)."""
+        with self._registry_lock:
+            lid = self._lineage_of.get(blob_id)
+            if lid is None:
+                raise BlobUnknown(blob_id)
+            return lid
+
+    @staticmethod
+    def _blob_in(sh: LineageShard, blob_id: str) -> BlobRecord:
         try:
-            return self._blobs[blob_id]
+            return sh.blobs[blob_id]
         except KeyError:
             raise BlobUnknown(blob_id)
 
-    def _owner_record(self, blob_id: str, version: int) -> BlobRecord:
-        """BlobRecord owning ``version`` (walks branch lineage)."""
-        b = self._blob(blob_id)
+    def _owner_record(self, sh: LineageShard, blob_id: str, version: int) -> BlobRecord:
+        """BlobRecord owning ``version`` (walks branch lineage).
+        Caller holds the shard lock; the whole walk stays in-shard."""
+        b = self._blob_in(sh, blob_id)
         while version <= b.base_version and b.parent is not None:
-            b = self._blob(b.parent[0])
+            b = self._blob_in(sh, b.parent[0])
         return b
 
-    def _record(self, blob_id: str, version: int) -> Optional[UpdateRecord]:
+    def _record(self, sh: LineageShard, blob_id: str, version: int) -> Optional[UpdateRecord]:
         """Update record for ``version``, walking branch lineage."""
-        return self._owner_record(blob_id, version).updates.get(version)
+        return self._owner_record(sh, blob_id, version).updates.get(version)
 
-    def _check_not_retired(self, blob_id: str, version: int) -> None:
-        # caller holds the lock; retirement is recorded on the owner blob,
-        # so a branch reading an inherited snapshot sees it too
-        if version in self._owner_record(blob_id, version).retired:
+    def _check_not_retired(self, sh: LineageShard, blob_id: str, version: int) -> None:
+        # caller holds the shard lock; retirement is recorded on the owner
+        # blob, so a branch reading an inherited snapshot sees it too
+        if version in self._owner_record(sh, blob_id, version).retired:
             raise RetiredVersion(f"{blob_id} v{version} retired by GC")
 
-    def _latest_live_published(self, b: BlobRecord) -> int:
+    def _latest_live_published(self, sh: LineageShard, b: BlobRecord) -> int:
         """Newest published, non-retired version — what GET_RECENT hands
         out and what new updates anchor their border descents on (a
         retired anchor would race the sweep)."""
         v = b.published
-        while v > 0 and v in self._owner_record(b.blob_id, v).retired:
+        while v > 0 and v in self._owner_record(sh, b.blob_id, v).retired:
             v -= 1
         return v
 
     def owner_of(self, blob_id: str, version: int) -> str:
         """Blob id owning the tree nodes of ``version`` (branch lineage)."""
-        with self._lock:
-            return self._owner_record(blob_id, version).blob_id
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            return self._owner_record(sh, blob_id, version).blob_id
 
     def lineage(self, blob_id: str) -> Tuple[Tuple[str, int], ...]:
         """Branch chain as ((blob_id, base_version), ...) youngest first.
@@ -234,61 +378,82 @@ class VersionManager:
         Version ``v`` is owned by the first entry with ``v > base``.
         Clients cache this; it only ever grows by BRANCH.
         """
-        with self._lock:
+        sh = self._shard_of(blob_id)
+        with sh.lock:
             chain: List[Tuple[str, int]] = []
-            b = self._blob(blob_id)
+            b = self._blob_in(sh, blob_id)
             while True:
                 chain.append((b.blob_id, b.base_version))
                 if b.parent is None:
                     break
-                b = self._blob(b.parent[0])
+                b = self._blob_in(sh, b.parent[0])
             return tuple(chain)
 
-    def _size_of(self, blob_id: str, version: int) -> int:
+    def _size_of(self, sh: LineageShard, blob_id: str, version: int) -> int:
         if version == 0:
             return 0
-        rec = self._record(blob_id, version)
+        rec = self._record(sh, blob_id, version)
         if rec is None:
             raise VersionUnpublished(f"{blob_id} v{version} not assigned")
         return rec.new_blob_size
 
-    def _root_pages_of(self, blob_id: str, version: int) -> int:
+    def _root_pages_of(self, sh: LineageShard, blob_id: str, version: int) -> int:
         if version == 0:
             return 0
-        rec = self._record(blob_id, version)
+        rec = self._record(sh, blob_id, version)
         if rec is None:
             raise VersionUnpublished(f"{blob_id} v{version} not assigned")
         return rec.root_pages
 
     # ------------------------------------------------------------- public API
     def create(self, psize: int, client: Optional[str] = None) -> str:
-        """CREATE: new empty blob, snapshot 0 (size 0)."""
+        """CREATE: new empty blob, snapshot 0 (size 0).  Roots a fresh
+        lineage shard — updates to it will never contend with any
+        existing blob's version-manager critical section."""
         self._charge(client)
-        with self._lock:
+        with self._registry_lock:
             blob_id = f"blob-{next(self._ids):08d}"
-            self._blobs[blob_id] = BlobRecord(blob_id=blob_id, psize=psize)
-            self._journal({"op": "create", "blob": blob_id, "psize": psize})
-            return blob_id
+            sh = LineageShard(blob_id, self._clock)
+            sh.blobs[blob_id] = BlobRecord(blob_id=blob_id, psize=psize,
+                                           lineage_id=blob_id)
+            self._shards[blob_id] = sh
+            self._lineage_of[blob_id] = blob_id
+            self._blob_order.append(blob_id)
+            # journal BEFORE the registry lock drops: the instant the
+            # blob is visible, another thread may journal an op on it,
+            # and recovery requires the 'create' record to come first
+            self._journal(blob_id, {"op": "create", "blob": blob_id,
+                                    "psize": psize})
+        return blob_id
 
     def branch(self, blob_id: str, version: int, client: Optional[str] = None) -> str:
-        """BRANCH: fork ``blob_id`` at published snapshot ``version``."""
+        """BRANCH: fork ``blob_id`` at published snapshot ``version``.
+        The fork joins its ancestor's lineage shard (inherited versions,
+        branch-root retention and border anchors stay intra-shard)."""
         self._charge(client)
-        with self._lock:
-            src = self._blob(blob_id)
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            src = self._blob_in(sh, blob_id)
             if version > src.published:
                 raise VersionUnpublished(f"{blob_id} v{version} not published")
             if version > 0:
-                self._check_not_retired(blob_id, version)
-            bid = f"blob-{next(self._ids):08d}"
-            self._blobs[bid] = BlobRecord(
+                self._check_not_retired(sh, blob_id, version)
+            with self._registry_lock:
+                bid = f"blob-{next(self._ids):08d}"
+                self._lineage_of[bid] = sh.lineage_id
+                self._blob_order.append(bid)
+            sh.blobs[bid] = BlobRecord(
                 blob_id=bid,
                 psize=src.psize,
                 parent=(blob_id, version),
                 base_version=version,
                 last_assigned=version,
                 published=version,
+                lineage_id=sh.lineage_id,
             )
-            self._journal({"op": "branch", "blob": bid, "src": blob_id, "at": version})
+            self._journal(sh.lineage_id,
+                          {"op": "branch", "blob": bid, "src": blob_id,
+                           "at": version})
             return bid
 
     def get_recent(self, blob_id: str, client: Optional[str] = None) -> int:
@@ -300,45 +465,114 @@ class VersionManager:
         explicit-keep GC).
         """
         self._charge(client)
-        with self._lock:
-            return self._latest_live_published(self._blob(blob_id))
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            return self._latest_live_published(sh, self._blob_in(sh, blob_id))
 
     def get_size(self, blob_id: str, version: int, client: Optional[str] = None) -> int:
         """GET_SIZE of a *published* snapshot (paper: fails otherwise)."""
         self._charge(client)
-        with self._lock:
-            if version > self._blob(blob_id).published:
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            if version > self._blob_in(sh, blob_id).published:
                 raise VersionUnpublished(f"{blob_id} v{version} not published")
             if version > 0:
-                self._check_not_retired(blob_id, version)
-            return self._size_of(blob_id, version)
+                self._check_not_retired(sh, blob_id, version)
+            return self._size_of(sh, blob_id, version)
 
     def psize_of(self, blob_id: str) -> int:
         """The blob's immutable page size (fixed at CREATE)."""
-        with self._lock:
-            return self._blob(blob_id).psize
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            return self._blob_in(sh, blob_id).psize
 
     def sync(self, blob_id: str, version: int, timeout: Optional[float] = None,
              client: Optional[str] = None) -> None:
-        """SYNC: block until ``version`` is published."""
+        """SYNC: block until ``version`` is published (waits on the
+        blob's lineage shard — publication on other lineages neither
+        wakes nor delays this)."""
         self._charge(client)
+        sh = self._shard_of(blob_id)
         deadline = None if timeout is None else self._clock.now() + timeout
-        with self._cond:
-            while self._blob(blob_id).published < version:
+        with sh.cond:
+            while self._blob_in(sh, blob_id).published < version:
                 remaining = None if deadline is None else deadline - self._clock.now()
                 if remaining is not None and remaining <= 0:
                     raise TimeoutError(f"SYNC {blob_id} v{version}")
-                self._cond.wait(remaining)
+                sh.cond.wait(remaining)
 
     def is_published(self, blob_id: str, version: int) -> bool:
         """Has ``version`` been published (atomically visible)?  True
         for retired versions too — reads of those get the typed
         :class:`RetiredVersion` from :meth:`enter_read`, not a
         'not published' answer."""
-        with self._lock:
-            return version <= self._blob(blob_id).published
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            return version <= self._blob_in(sh, blob_id).published
 
     # ----------------------------------------------------- update registration
+    def _assign_locked(
+        self,
+        sh: LineageShard,
+        blob_id: str,
+        offset: Optional[int],
+        size: int,
+        client: str,
+        pd: Tuple,
+    ) -> "AssignInfo":
+        """Register one update; caller holds the shard lock and has
+        already charged the wire."""
+        b = self._blob_in(sh, blob_id)
+        prev_size = self._size_of(sh, blob_id, b.last_assigned)
+        if offset is None:
+            offset = prev_size           # APPEND semantics
+            is_append = True
+        else:
+            is_append = False
+            if offset > prev_size:
+                raise WriteBeyondEnd(
+                    f"offset {offset} > size {prev_size} of snapshot v{b.last_assigned}"
+                )
+        if size <= 0:
+            raise ValueError("update size must be positive")
+        vw = b.last_assigned + 1
+        b.last_assigned = vw
+        new_size = max(prev_size, offset + size)
+        root_pages = root_pages_for(new_size, b.psize)
+        p0, p1 = pages_spanned(offset, size, b.psize)
+        rec = UpdateRecord(
+            version=vw, offset=offset, size=size, new_blob_size=new_size,
+            root_pages=root_pages, p0=p0, p1=p1, is_append=is_append,
+            client=client, pd=tuple(pd), assigned_at=self._clock.now(),
+        )
+        b.updates[vw] = rec
+        # §4.2: ranges of every update between the last published
+        # snapshot and vw — the information from which the writer
+        # resolves border nodes of concurrent unpublished updates.
+        # The anchor vp must be a *live* (non-retired) published
+        # version: the writer descends its tree, and GC keeps every
+        # anchor of an in-flight update pinned until it completes.
+        vp = self._latest_live_published(sh, b)
+        rec.vp = vp if vp > 0 else None
+        recent: List[Tuple[int, int, int]] = []
+        for u in range(vp + 1, vw):
+            r = b.updates.get(u)
+            if r is not None and u not in b.retired:
+                recent.append((r.version, r.p0, r.p1))
+        vp_out: Optional[int] = vp if vp > 0 else None
+        vp_root = self._root_pages_of(sh, blob_id, vp) if vp > 0 else 0
+        self._journal(sh.lineage_id, {
+            "op": "assign", "blob": blob_id, "v": vw, "offset": offset,
+            "size": size, "new_size": new_size, "append": is_append,
+            "client": client, "pd": [list(x) for x in pd],
+            "vp": rec.vp,
+        })
+        return AssignInfo(
+            version=vw, offset=offset, prev_size=prev_size,
+            new_size=new_size, root_pages=root_pages, p0=p0, p1=p1,
+            vp=vp_out, vp_root_pages=vp_root, recent_updates=tuple(recent),
+        )
+
     def assign_version(
         self,
         blob_id: str,
@@ -351,60 +585,86 @@ class VersionManager:
 
         The page descriptors ``pd`` (for pages already stored) are
         journaled so a recovery agent can replay BUILD_META if the
-        writer dies before completing its metadata.
+        writer dies before completing its metadata.  The returned
+        :class:`AssignInfo` carries the full border context (``vp``,
+        ``vp_root_pages``, ``recent_updates``, the update's page
+        extent), which is what lets the client *prefetch* its whole
+        border set in level-batched waves before BUILD_META starts.
         """
         self._charge(client)
-        with self._lock:
-            b = self._blob(blob_id)
-            prev_size = self._size_of(blob_id, b.last_assigned)
-            if offset is None:
-                offset = prev_size           # APPEND semantics
-                is_append = True
-            else:
-                is_append = False
-                if offset > prev_size:
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            return self._assign_locked(sh, blob_id, offset, size, client,
+                                       tuple(pd))
+
+    def assign_versions_many(
+        self,
+        requests: Sequence[Tuple[str, Optional[int], int, Tuple]],
+        client: str,
+    ) -> List["AssignInfo"]:
+        """Batched :meth:`assign_version`: ONE control round trip for
+        many updates.
+
+        ``requests`` holds ``(blob_id, offset_or_None, size, pd)``
+        tuples (``None`` offset = APPEND); the result list matches the
+        request order.  The whole batch pays a single wire latency plus
+        ``VM_ASSIGN_REQ_BYTES`` per request — an appender issuing
+        bursts of K amortizes the version-manager round trip K-fold,
+        the paper's Fig 3 concern addressed the way ``get_many`` fixed
+        the metadata read plane.
+
+        Requests for one blob are assigned in list order, and each
+        later request's ``recent_updates`` includes the earlier ones
+        (they are in-flight registry entries by then), so a client can
+        weave an entire burst without any extra border round trips.
+        Requests for different blobs are routed to their lineage shards
+        independently.  The batch is **atomic with respect to
+        validation**: every request is validated against the batch's
+        own running state (all touched shards locked, in sorted lineage
+        order) before anything is assigned, so a request that fails
+        (:class:`WriteBeyondEnd`, non-positive size, unknown blob)
+        raises with NO version assigned — a failed batch never leaves
+        half-assigned updates stalling a publication pipeline.
+        """
+        requests = [(blob_id, offset, size, tuple(pd))
+                    for blob_id, offset, size, pd in requests]
+        if not requests:
+            return []
+        self._charge_batch(len(requests), VM_ASSIGN_REQ_BYTES, "assign", client)
+        shard_of: List[LineageShard] = [self._shard_of(blob_id)
+                                        for blob_id, *_ in requests]
+        ordered = sorted({sh.lineage_id: sh for sh in shard_of}.values(),
+                         key=lambda sh: sh.lineage_id)
+        for sh in ordered:                 # sorted order: deadlock-free
+            sh.lock.acquire()
+        try:
+            # phase 1: validate the whole batch against its running
+            # per-blob state (sizes only grow within the batch)
+            running: Dict[str, int] = {}   # blob -> projected size
+            for i, (blob_id, offset, size, _pd) in enumerate(requests):
+                sh = shard_of[i]
+                b = self._blob_in(sh, blob_id)
+                prev = running.get(blob_id)
+                if prev is None:
+                    prev = self._size_of(sh, blob_id, b.last_assigned)
+                if size <= 0:
+                    raise ValueError("update size must be positive")
+                if offset is not None and offset > prev:
                     raise WriteBeyondEnd(
-                        f"offset {offset} > size {prev_size} of snapshot v{b.last_assigned}"
+                        f"offset {offset} > projected size {prev} "
+                        f"of {blob_id} (request {i} of the batch)"
                     )
-            if size <= 0:
-                raise ValueError("update size must be positive")
-            vw = b.last_assigned + 1
-            b.last_assigned = vw
-            new_size = max(prev_size, offset + size)
-            root_pages = root_pages_for(new_size, b.psize)
-            p0, p1 = pages_spanned(offset, size, b.psize)
-            rec = UpdateRecord(
-                version=vw, offset=offset, size=size, new_blob_size=new_size,
-                root_pages=root_pages, p0=p0, p1=p1, is_append=is_append,
-                client=client, pd=tuple(pd), assigned_at=self._clock.now(),
-            )
-            b.updates[vw] = rec
-            # §4.2: ranges of every update between the last published
-            # snapshot and vw — the information from which the writer
-            # resolves border nodes of concurrent unpublished updates.
-            # The anchor vp must be a *live* (non-retired) published
-            # version: the writer descends its tree, and GC keeps every
-            # anchor of an in-flight update pinned until it completes.
-            vp = self._latest_live_published(b)
-            rec.vp = vp if vp > 0 else None
-            recent: List[Tuple[int, int, int]] = []
-            for u in range(vp + 1, vw):
-                r = b.updates.get(u)
-                if r is not None and u not in b.retired:
-                    recent.append((r.version, r.p0, r.p1))
-            vp_out: Optional[int] = vp if vp > 0 else None
-            vp_root = self._root_pages_of(blob_id, vp) if vp > 0 else 0
-            self._journal({
-                "op": "assign", "blob": blob_id, "v": vw, "offset": offset,
-                "size": size, "new_size": new_size, "append": is_append,
-                "client": client, "pd": [list(x) for x in pd],
-                "vp": rec.vp,
-            })
-            return AssignInfo(
-                version=vw, offset=offset, prev_size=prev_size,
-                new_size=new_size, root_pages=root_pages, p0=p0, p1=p1,
-                vp=vp_out, vp_root_pages=vp_root, recent_updates=tuple(recent),
-            )
+                off = prev if offset is None else offset
+                running[blob_id] = max(prev, off + size)
+            # phase 2: apply in request order (locks held throughout)
+            return [
+                self._assign_locked(shard_of[i], blob_id, offset, size,
+                                    client, pd)
+                for i, (blob_id, offset, size, pd) in enumerate(requests)
+            ]
+        finally:
+            for sh in reversed(ordered):
+                sh.lock.release()
 
     def register_pd(self, blob_id: str, version: int, pd: Tuple,
                     client: Optional[str] = None) -> None:
@@ -415,33 +675,77 @@ class VersionManager:
         assignment).  Keeps WAL-based recovery deterministic.
         """
         self._charge(client)
-        with self._lock:
-            rec = self._blob(blob_id).updates[version]
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            rec = self._blob_in(sh, blob_id).updates[version]
             rec.pd = tuple(pd)
-            self._journal({
+            self._journal(sh.lineage_id, {
                 "op": "pd", "blob": blob_id, "v": version,
                 "pd": [list(x) for x in pd],
             })
+
+    def _complete_locked(self, sh: LineageShard, blob_id: str,
+                         version: int) -> None:
+        """Mark ``version`` complete and publish in order; caller holds
+        the shard cond's lock."""
+        b = self._blob_in(sh, blob_id)
+        rec = b.updates[version]
+        rec.complete = True
+        self._journal(sh.lineage_id,
+                      {"op": "complete", "blob": blob_id, "v": version})
+        # In-order publication *per blob*: snapshot v is revealed only
+        # once every snapshot < v of the same blob is published, so
+        # readers can always resolve the full weaved tree of anything
+        # they are allowed to see.  Other blobs — even in this lineage
+        # — publish independently.
+        while True:
+            nxt = b.updates.get(b.published + 1)
+            if nxt is None or not nxt.complete:
+                break
+            b.published += 1
+            self._journal(sh.lineage_id,
+                          {"op": "publish", "blob": blob_id, "v": b.published})
 
     def metadata_complete(self, blob_id: str, version: int,
                           client: Optional[str] = None) -> None:
         """Writer finished BUILD_META; publish in order (atomicity)."""
         self._charge(client)
-        with self._cond:
-            b = self._blob(blob_id)
-            rec = b.updates[version]
-            rec.complete = True
-            self._journal({"op": "complete", "blob": blob_id, "v": version})
-            # In-order publication: snapshot v is revealed only once every
-            # snapshot < v is published, so readers can always resolve the
-            # full weaved tree of anything they are allowed to see.
-            while True:
-                nxt = b.updates.get(b.published + 1)
-                if nxt is None or not nxt.complete:
-                    break
-                b.published += 1
-                self._journal({"op": "publish", "blob": blob_id, "v": b.published})
-            self._cond.notify_all()
+        sh = self._shard_of(blob_id)
+        with sh.cond:
+            self._complete_locked(sh, blob_id, version)
+            sh.cond.notify_all()
+
+    def metadata_complete_many(
+        self,
+        items: Sequence[Tuple[str, int]],
+        client: Optional[str] = None,
+    ) -> None:
+        """Batched :meth:`metadata_complete`: ONE control round trip
+        marks many ``(blob_id, version)`` updates complete and runs
+        each blob's in-order publication.
+
+        The batch pays one wire latency plus ``VM_COMPLETE_CMD_BYTES``
+        per command.  Items are applied in list order per lineage
+        (publication is per blob, so cross-blob order inside the batch
+        is immaterial); SYNC waiters of every touched lineage are woken
+        once per lineage.
+        """
+        items = list(items)
+        if not items:
+            return
+        self._charge_batch(len(items), VM_COMPLETE_CMD_BYTES, "complete", client)
+        groups: Dict[str, List[Tuple[str, int]]] = {}
+        shards: Dict[str, LineageShard] = {}
+        for blob_id, version in items:
+            sh = self._shard_of(blob_id)
+            shards.setdefault(sh.lineage_id, sh)
+            groups.setdefault(sh.lineage_id, []).append((blob_id, version))
+        for lid in sorted(groups):
+            sh = shards[lid]
+            with sh.cond:
+                for blob_id, version in groups[lid]:
+                    self._complete_locked(sh, blob_id, version)
+                sh.cond.notify_all()
 
     def wait_metadata(self, blob_id: str, version: int,
                       timeout: Optional[float] = None) -> None:
@@ -449,12 +753,13 @@ class VersionManager:
         published).  Needed only by unaligned writes that must merge
         boundary-page content from snapshot ``version`` (§3 "slightly
         more complex" path)."""
+        sh = self._shard_of(blob_id)
         deadline = None if timeout is None else self._clock.now() + timeout
-        with self._cond:
+        with sh.cond:
             while True:
-                b = self._blob(blob_id)
+                b = self._blob_in(sh, blob_id)
                 if version <= b.base_version and b.parent is not None:
-                    if self._record(blob_id, version) is not None or version == 0:
+                    if self._record(sh, blob_id, version) is not None or version == 0:
                         return
                 rec = b.updates.get(version)
                 if version == 0 or version <= b.published or (rec is not None and rec.complete):
@@ -462,7 +767,7 @@ class VersionManager:
                 remaining = None if deadline is None else deadline - self._clock.now()
                 if remaining is not None and remaining <= 0:
                     raise TimeoutError(f"metadata {blob_id} v{version}")
-                self._cond.wait(remaining)
+                sh.cond.wait(remaining)
 
     # ----------------------------------------------------------- introspection
     def update_log(self, blob_id: str, version: int) -> UpdateRecord:
@@ -471,26 +776,40 @@ class VersionManager:
         :class:`VersionUnpublished` for never-assigned versions.
         Retirement does NOT hide the record — GC itself reads retired
         records to derive sweep candidates."""
-        with self._lock:
-            rec = self._record(blob_id, version)
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            rec = self._record(sh, blob_id, version)
             if rec is None:
                 raise VersionUnpublished(f"{blob_id} v{version} not assigned")
             return rec
 
+    def version_bounds(self, blob_id: str) -> Tuple[int, int]:
+        """``(base_version, last_assigned)`` of the blob: the half-open
+        version interval ``(base, last]`` this blob *owns* (everything
+        ``<= base`` is inherited from its branch parent).  Restore and
+        GC iterate a blob's own history with this instead of reaching
+        into manager internals."""
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            b = self._blob_in(sh, blob_id)
+            return b.base_version, b.last_assigned
+
     def root_pages_published(self, blob_id: str, version: int) -> int:
         """Page span of the snapshot's segment-tree root, for published,
         non-retired versions (the read path's entry point to the tree)."""
-        with self._lock:
-            if version > self._blob(blob_id).published:
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            if version > self._blob_in(sh, blob_id).published:
                 raise VersionUnpublished(f"{blob_id} v{version} not published")
             if version > 0:
-                self._check_not_retired(blob_id, version)
-            return self._root_pages_of(blob_id, version)
+                self._check_not_retired(sh, blob_id, version)
+            return self._root_pages_of(sh, blob_id, version)
 
     def known_blobs(self) -> List[str]:
-        """Every blob id this manager has created (branches included)."""
-        with self._lock:
-            return list(self._blobs)
+        """Every blob id this manager has created (branches included),
+        in global creation order."""
+        with self._registry_lock:
+            return list(self._blob_order)
 
     # ------------------------------------------------ GC: pins + read leases
     def pin(self, blob_id: str, version: int, client: Optional[str] = None,
@@ -498,36 +817,43 @@ class VersionManager:
         """Pin ``(blob, version)``: GC keeps it until :meth:`unpin` or the
         lease's clock-based expiry.  Returns the lease id."""
         self._charge(client)
-        with self._lock:
-            b = self._blob(blob_id)
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            b = self._blob_in(sh, blob_id)
             if version <= 0 or version > b.published:
                 raise VersionUnpublished(f"{blob_id} v{version} not published")
-            self._check_not_retired(blob_id, version)
-            lease_id = f"pin-{next(self._pin_ids):08d}"
-            expires = None if ttl is None else self._clock.now() + ttl
-            self._pins[lease_id] = PinLease(lease_id, blob_id, version,
-                                            client, expires)
+            self._check_not_retired(sh, blob_id, version)
+            with self._pins_lock:
+                lease_id = f"pin-{next(self._pin_ids):08d}"
+                expires = None if ttl is None else self._clock.now() + ttl
+                self._pins[lease_id] = PinLease(lease_id, blob_id, version,
+                                                client, expires)
             return lease_id
 
     def unpin(self, lease_id: str, client: Optional[str] = None) -> None:
         """Release a pin lease (idempotent: unknown/expired ids are
         no-ops); the snapshot becomes retireable at the next GC plan."""
         self._charge(client)
-        with self._lock:
+        with self._pins_lock:
             self._pins.pop(lease_id, None)
 
-    def _live_pins(self, blob_id: str) -> Set[int]:
+    def _live_pins(self, sh: LineageShard, blob_id: str) -> Set[int]:
         """Unexpired pinned versions, recorded on the *owner* blob of
         each pinned version (a pin through a branch pins the ancestor's
-        snapshot).  Expired leases are pruned.  Caller holds the lock."""
+        snapshot).  Expired leases are pruned.  Caller holds the shard
+        lock; only pins of this shard's lineage can resolve to
+        ``blob_id``, so the owner walk stays in-shard."""
         now = self._clock.now()
-        expired = [lid for lid, p in self._pins.items()
-                   if p.expires_at is not None and p.expires_at < now]
-        for lid in expired:
-            del self._pins[lid]
+        with self._pins_lock:
+            expired = [lid for lid, p in self._pins.items()
+                       if p.expires_at is not None and p.expires_at < now]
+            for lid in expired:
+                del self._pins[lid]
+            candidates = [p for p in self._pins.values()
+                          if p.blob_id in sh.blobs]
         out: Set[int] = set()
-        for p in self._pins.values():
-            if self._owner_record(p.blob_id, p.version).blob_id == blob_id:
+        for p in candidates:
+            if self._owner_record(sh, p.blob_id, p.version).blob_id == blob_id:
                 out.add(p.version)
         return out
 
@@ -535,12 +861,13 @@ class VersionManager:
         """Versions currently protected by unexpired pin leases, keyed
         by *owner* blob (a pin taken through a branch shows up here on
         the ancestor that owns the pinned snapshot)."""
-        with self._lock:
-            return frozenset(self._live_pins(blob_id))
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            return frozenset(self._live_pins(sh, blob_id))
 
     def pins(self) -> List[PinLease]:
         """All currently held (possibly expired) pin leases."""
-        with self._lock:
+        with self._pins_lock:
             return list(self._pins.values())
 
     def enter_read(self, blob_id: str, version: int,
@@ -560,18 +887,19 @@ class VersionManager:
         lets it complete).
         """
         self._charge(client)
-        with self._lock:
-            b = self._blob(blob_id)
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            b = self._blob_in(sh, blob_id)
             if version > b.published:
                 raise VersionUnpublished(f"{blob_id} v{version} not published")
             if version == 0:
                 return 0, 0
-            self._check_not_retired(blob_id, version)
-            owner = self._owner_record(blob_id, version).blob_id
+            self._check_not_retired(sh, blob_id, version)
+            owner = self._owner_record(sh, blob_id, version).blob_id
             key = (owner, version)
-            self._active_reads[key] = self._active_reads.get(key, 0) + 1
-            return (self._size_of(blob_id, version),
-                    self._root_pages_of(blob_id, version))
+            sh.active_reads[key] = sh.active_reads.get(key, 0) + 1
+            return (self._size_of(sh, blob_id, version),
+                    self._root_pages_of(sh, blob_id, version))
 
     def exit_read(self, blob_id: str, version: int,
                   client: Optional[str] = None) -> None:
@@ -579,15 +907,16 @@ class VersionManager:
         if version == 0:
             return
         self._charge(client)
-        with self._cond:
-            owner = self._owner_record(blob_id, version).blob_id
+        sh = self._shard_of(blob_id)
+        with sh.cond:
+            owner = self._owner_record(sh, blob_id, version).blob_id
             key = (owner, version)
-            n = self._active_reads.get(key, 0) - 1
+            n = sh.active_reads.get(key, 0) - 1
             if n <= 0:
-                self._active_reads.pop(key, None)
+                sh.active_reads.pop(key, None)
             else:
-                self._active_reads[key] = n
-            self._cond.notify_all()
+                sh.active_reads[key] = n
+            sh.cond.notify_all()
 
     def wait_reads_drained(self, blob_id: str, versions: Iterable[int],
                            timeout: Optional[float] = None) -> None:
@@ -596,16 +925,17 @@ class VersionManager:
         The sweep's drain barrier: called after retire-intent (so no new
         lease on those versions can be opened) and before any delete is
         issued.  Blocks through the clock, so it is virtual-time-correct
-        under the simulator.
+        under the simulator, and waits only on the blob's lineage shard.
         """
         keys = [(blob_id, v) for v in sorted(set(versions))]
+        sh = self._shard_of(blob_id)
         deadline = None if timeout is None else self._clock.now() + timeout
-        with self._cond:
-            while any(self._active_reads.get(k, 0) > 0 for k in keys):
+        with sh.cond:
+            while any(sh.active_reads.get(k, 0) > 0 for k in keys):
                 remaining = None if deadline is None else deadline - self._clock.now()
                 if remaining is not None and remaining <= 0:
                     raise TimeoutError(f"reads of {blob_id} did not drain")
-                self._cond.wait(remaining)
+                sh.cond.wait(remaining)
 
     # -------------------------------------------- GC: retention + retirement
     def set_retention(self, blob_id: str, keep_last: int,
@@ -616,24 +946,27 @@ class VersionManager:
         if keep_last < 0:
             raise ValueError("keep_last must be >= 0")
         self._charge(client)
-        with self._lock:
-            self._blob(blob_id).keep_last = keep_last
-            self._journal({"op": "retention", "blob": blob_id,
-                           "keep_last": keep_last})
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            self._blob_in(sh, blob_id).keep_last = keep_last
+            self._journal(sh.lineage_id, {"op": "retention", "blob": blob_id,
+                                          "keep_last": keep_last})
 
     def gc_epoch(self, blob_id: str) -> int:
         """Monotone retirement epoch: bumped (and journaled) every time
         :meth:`plan_retirement` retires at least one version.  Cache
         layers key their eviction notifications off it (see
         :meth:`add_gc_listener`)."""
-        with self._lock:
-            return self._blob(blob_id).gc_epoch
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            return self._blob_in(sh, blob_id).gc_epoch
 
     def retired_versions(self, blob_id: str) -> FrozenSet[int]:
         """Versions under retire-intent on this blob (swept or not):
         reads/pins/branches of them answer :class:`RetiredVersion`."""
-        with self._lock:
-            return frozenset(self._blob(blob_id).retired)
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            return frozenset(self._blob_in(sh, blob_id).retired)
 
     def plan_retirement(
         self,
@@ -660,6 +993,11 @@ class VersionManager:
           (an in-flight writer descends that tree for border nodes),
         * always the newest published version (new updates anchor on it).
 
+        Every rule above is an intra-lineage fact (branches join their
+        ancestor's shard), so the whole plan runs under ONE shard lock
+        and scans only this lineage's blobs — a GC round never touches
+        another lineage's critical section.
+
         Marking is the retire-*intent*: from this instant every
         ``enter_read``/``pin``/``branch`` of a retired version answers
         ``RetiredVersion``.  The intent is journaled before any sweep
@@ -667,8 +1005,9 @@ class VersionManager:
         pages might be partially deleted.
         """
         self._charge(client)
-        with self._lock:
-            b = self._blob(blob_id)
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            b = self._blob_in(sh, blob_id)
             published = set(range(b.base_version + 1, b.published + 1))
             if not published:
                 return (), ()
@@ -681,21 +1020,21 @@ class VersionManager:
             else:
                 keep = set(published)
             keep.add(b.published)
-            keep.update(self._live_pins(blob_id))
-            for other in self._blobs.values():
+            keep.update(self._live_pins(sh, blob_id))
+            for other in sh.blobs.values():
                 # owner-normalized like pins: a fork point at an inherited
                 # version (C = branch(B, 3) where v3 is owned by A, B's
                 # ancestor) must be kept by v3's *owner*, not by the blob
                 # named in parent[0]
                 if (other.parent is not None and other.parent[1] > 0
                         and self._owner_record(
-                            other.parent[0], other.parent[1]).blob_id
+                            sh, other.parent[0], other.parent[1]).blob_id
                         == blob_id):
                     keep.add(other.parent[1])
                 for u in range(other.published + 1, other.last_assigned + 1):
                     r = other.updates.get(u)
                     if (r is not None and not r.complete and r.vp is not None
-                            and self._owner_record(other.blob_id, r.vp).blob_id
+                            and self._owner_record(sh, other.blob_id, r.vp).blob_id
                             == blob_id):
                         keep.add(r.vp)
             newly = sorted(published - keep - b.retired)
@@ -706,7 +1045,8 @@ class VersionManager:
                 b.retired.update(newly)
                 b.gc_epoch += 1
                 epoch = b.gc_epoch
-                self._journal({"op": "retire", "blob": blob_id,
+                self._journal(sh.lineage_id,
+                              {"op": "retire", "blob": blob_id,
                                "versions": newly, "epoch": epoch})
                 for v in newly:
                     rec = b.updates.get(v)
@@ -732,8 +1072,9 @@ class VersionManager:
         """Retired-but-not-yet-finalized updates, oldest first.  The
         sweep derives each one's candidate set from the journaled page
         descriptors and the deterministic tree shape — no store scan."""
-        with self._lock:
-            b = self._blob(blob_id)
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            b = self._blob_in(sh, blob_id)
             return [b.updates[v] for v in sorted(b.retired - b.swept)
                     if v in b.updates]
 
@@ -746,10 +1087,11 @@ class VersionManager:
         if not versions:
             return
         self._charge(client)
-        with self._lock:
-            self._blob(blob_id).swept.update(versions)
-            self._journal({"op": "swept", "blob": blob_id,
-                           "versions": versions})
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            self._blob_in(sh, blob_id).swept.update(versions)
+            self._journal(sh.lineage_id, {"op": "swept", "blob": blob_id,
+                                          "versions": versions})
 
     def unfinalize_sweep(self, blob_id: str, versions: Iterable[int],
                          client: Optional[str] = None) -> None:
@@ -765,14 +1107,15 @@ class VersionManager:
         if not versions:
             return
         self._charge(client)
-        with self._lock:
-            b = self._blob(blob_id)
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            b = self._blob_in(sh, blob_id)
             versions = sorted(versions & b.swept)
             if not versions:
                 return  # never finalized: already pending, nothing to journal
             b.swept.difference_update(versions)
-            self._journal({"op": "unswept", "blob": blob_id,
-                           "versions": versions})
+            self._journal(sh.lineage_id, {"op": "unswept", "blob": blob_id,
+                                          "versions": versions})
 
     def all_page_ids(self) -> Set[str]:
         """Every page id any assigned update (any blob, any version,
@@ -781,50 +1124,55 @@ class VersionManager:
         never registered, e.g. a restriped optimistic append or a
         writer that died before version assignment — as collectable
         once they outlive the grace window."""
-        with self._lock:
-            out: Set[str] = set()
-            for b in self._blobs.values():
-                for rec in b.updates.values():
-                    for pd in rec.pd:
-                        out.add(pd[0])
-            return out
+        out: Set[str] = set()
+        for sh in self._all_shards():
+            with sh.lock:
+                for b in sh.blobs.values():
+                    for rec in b.updates.values():
+                        for pd in rec.pd:
+                            out.add(pd[0])
+        return out
 
     def mark_roots(self) -> Dict[str, List[Tuple[int, int]]]:
         """Every live snapshot the mark phase must walk: blob id ->
         [(version, root_pages)] over the blob's own published, non-retired
         versions.  Inherited versions appear under their owner blob."""
-        with self._lock:
-            out: Dict[str, List[Tuple[int, int]]] = {}
-            for b in self._blobs.values():
-                roots = [(v, b.updates[v].root_pages)
-                         for v in range(b.base_version + 1, b.published + 1)
-                         if v not in b.retired and v in b.updates]
-                if roots:
-                    out[b.blob_id] = roots
-            return out
+        out: Dict[str, List[Tuple[int, int]]] = {}
+        for sh in self._all_shards():
+            with sh.lock:
+                for b in sh.blobs.values():
+                    roots = [(v, b.updates[v].root_pages)
+                             for v in range(b.base_version + 1, b.published + 1)
+                             if v not in b.retired and v in b.updates]
+                    if roots:
+                        out[b.blob_id] = roots
+        return out
 
     # ------------------------------------------------------- failure handling
     def find_stalled(self, timeout: float) -> List[Tuple[str, UpdateRecord]]:
         """Assigned-but-incomplete updates older than ``timeout`` seconds.
 
-        These block the publication pipeline (in-order publishing); a
+        These block their own blob's publication pipeline (in-order
+        publishing is per blob — other blobs keep publishing); a
         recovery agent replays their metadata from the journaled page
         descriptors and calls :meth:`metadata_complete`.
         """
         now = self._clock.now()
         out = []
-        with self._lock:
-            for b in self._blobs.values():
-                for v in range(b.published + 1, b.last_assigned + 1):
-                    rec = b.updates.get(v)
-                    if rec is not None and not rec.complete and now - rec.assigned_at > timeout:
-                        out.append((b.blob_id, rec))
+        for sh in self._all_shards():
+            with sh.lock:
+                for b in sh.blobs.values():
+                    for v in range(b.published + 1, b.last_assigned + 1):
+                        rec = b.updates.get(v)
+                        if rec is not None and not rec.complete and now - rec.assigned_at > timeout:
+                            out.append((b.blob_id, rec))
         return out
 
     def assign_info_for_recovery(self, blob_id: str, version: int) -> "AssignInfo":
         """Reconstruct the AssignInfo a dead writer was handed."""
-        with self._lock:
-            b = self._blob(blob_id)
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            b = self._blob_in(sh, blob_id)
             rec = b.updates[version]
             vp = b.published
             recent = tuple(
@@ -834,37 +1182,58 @@ class VersionManager:
             )
             return AssignInfo(
                 version=version, offset=rec.offset,
-                prev_size=self._size_of(blob_id, version - 1) if version > 1 else 0,
+                prev_size=self._size_of(sh, blob_id, version - 1) if version > 1 else 0,
                 new_size=rec.new_blob_size, root_pages=rec.root_pages,
                 p0=rec.p0, p1=rec.p1,
                 vp=vp if vp > 0 else None,
-                vp_root_pages=self._root_pages_of(blob_id, vp) if vp > 0 else 0,
+                vp_root_pages=self._root_pages_of(sh, blob_id, vp) if vp > 0 else 0,
                 recent_updates=recent,
             )
 
     # ------------------------------------------------------------ WAL recovery
     @classmethod
     def recover_from_wal(cls, wal_path: str, wire: Optional[Wire] = None) -> "VersionManager":
-        """Rebuild full version-manager state from the journal."""
+        """Rebuild full version-manager state from the journal.
+
+        ``create`` records root a lineage shard (the record's lineage
+        id is the blob itself); ``branch`` records join their source's
+        shard.  Every other record is routed to its lineage's shard —
+        replay order only matters *within* a lineage, which is exactly
+        the order each shard's lock serialized at journal time.
+        """
         vm = cls(wire=wire)
         max_id = 0
+
+        def blob_rec(blob_id: str) -> BlobRecord:
+            return vm._shards[vm._lineage_of[blob_id]].blobs[blob_id]
+
         with open(wal_path) as f:
             for line in f:
                 rec = json.loads(line)
                 op = rec["op"]
                 if op == "create":
-                    vm._blobs[rec["blob"]] = BlobRecord(rec["blob"], rec["psize"])
-                    max_id = max(max_id, int(rec["blob"].split("-")[1]))
+                    bid = rec["blob"]
+                    sh = LineageShard(bid, vm._clock)
+                    sh.blobs[bid] = BlobRecord(bid, rec["psize"],
+                                               lineage_id=bid)
+                    vm._shards[bid] = sh
+                    vm._lineage_of[bid] = bid
+                    vm._blob_order.append(bid)
+                    max_id = max(max_id, int(bid.split("-")[1]))
                 elif op == "branch":
-                    src = vm._blobs[rec["src"]]
-                    vm._blobs[rec["blob"]] = BlobRecord(
+                    src = blob_rec(rec["src"])
+                    lid = src.lineage_id
+                    vm._shards[lid].blobs[rec["blob"]] = BlobRecord(
                         blob_id=rec["blob"], psize=src.psize,
                         parent=(rec["src"], rec["at"]), base_version=rec["at"],
                         last_assigned=rec["at"], published=rec["at"],
+                        lineage_id=lid,
                     )
+                    vm._lineage_of[rec["blob"]] = lid
+                    vm._blob_order.append(rec["blob"])
                     max_id = max(max_id, int(rec["blob"].split("-")[1]))
                 elif op == "assign":
-                    b = vm._blobs[rec["blob"]]
+                    b = blob_rec(rec["blob"])
                     psz = b.psize
                     p0, p1 = pages_spanned(rec["offset"], rec["size"], psz)
                     b.updates[rec["v"]] = UpdateRecord(
@@ -881,23 +1250,23 @@ class VersionManager:
                     )
                     b.last_assigned = max(b.last_assigned, rec["v"])
                 elif op == "pd":
-                    vm._blobs[rec["blob"]].updates[rec["v"]].pd = tuple(
+                    blob_rec(rec["blob"]).updates[rec["v"]].pd = tuple(
                         tuple(x) for x in rec["pd"]
                     )
                 elif op == "complete":
-                    vm._blobs[rec["blob"]].updates[rec["v"]].complete = True
+                    blob_rec(rec["blob"]).updates[rec["v"]].complete = True
                 elif op == "publish":
-                    vm._blobs[rec["blob"]].published = rec["v"]
+                    blob_rec(rec["blob"]).published = rec["v"]
                 elif op == "retention":
-                    vm._blobs[rec["blob"]].keep_last = rec["keep_last"]
+                    blob_rec(rec["blob"]).keep_last = rec["keep_last"]
                 elif op == "retire":
-                    b = vm._blobs[rec["blob"]]
+                    b = blob_rec(rec["blob"])
                     b.retired.update(rec["versions"])
                     b.gc_epoch = max(b.gc_epoch, rec.get("epoch", 0))
                 elif op == "swept":
-                    vm._blobs[rec["blob"]].swept.update(rec["versions"])
+                    blob_rec(rec["blob"]).swept.update(rec["versions"])
                 elif op == "unswept":
-                    vm._blobs[rec["blob"]].swept.difference_update(
+                    blob_rec(rec["blob"]).swept.difference_update(
                         rec["versions"])
         vm._ids = itertools.count(max_id + 1)
         vm._wal_path = wal_path
@@ -907,7 +1276,16 @@ class VersionManager:
 
 @dataclass(frozen=True)
 class AssignInfo:
-    """Everything a writer receives from the version manager (§4.2)."""
+    """Everything a writer receives from the version manager (§4.2).
+
+    This is the full *border context* of the update: ``vp`` (the
+    published anchor tree to descend), ``vp_root_pages``,
+    ``recent_updates`` (ranges of every in-flight update between
+    ``vp`` and ``version``) plus the update's own page extent
+    ``(p0, p1, root_pages)`` — enough for the client to enumerate every
+    border range BUILD_META will touch (``segment_tree.border_ranges``)
+    and prefetch them in level-batched waves before the weave starts.
+    """
 
     version: int
     offset: int

@@ -70,7 +70,7 @@ def test_heartbeat_marks_dead_provider():
 
 
 class _DyingClient(blobmod.BlobClient):
-    def _build_and_complete(self, blob_id, info, pd_final):
+    def _build_and_complete(self, blob_id, info, pd_final, **kwargs):
         raise RuntimeError("writer crashed before BUILD_META")
 
 
