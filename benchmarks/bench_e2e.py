@@ -1,0 +1,156 @@
+"""End-to-end train/serve loop: checkpoint bytes scale with the delta.
+
+Runs the ``train_serve`` scenario (trainers streaming corpus shards,
+a checkpointer committing deltas through the content-hash dedup
+handshake, a serving tier reading recent checkpoints, GC racing
+everyone on the virtual clock) and asserts the PR gate:
+
+* steady-state checkpoint bytes-on-wire per step <= 1.25 x (d% of
+  model bytes) where each step dirties d% of the model's pages — the
+  wire cost scales with the delta, not the model;
+* >= 2x total bytes-on-wire reduction vs a dedup-disabled twin on the
+  same seed (the twin re-ships the full model on checkpointer
+  restart; the dedup handshake ships only the manifest+commit pages);
+* branch-then-checkpoint shares pages by refcount, not copy (the fork
+  save adds O(1) pages to the store, not O(model));
+* the handshake costs <= 1 control round trip per write burst
+  (``dedup_lookup_rounds`` <= number of save bursts);
+* same-seed replay produces an identical trace digest (the e2e loop
+  is deterministic);
+* the twin's ``dedup_*`` counters stay zero (``dedup=False`` keeps
+  the PR-5 wire schedule).
+
+Emits ``BENCH_e2e.json`` next to the CSV rows.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Reporter
+from repro.core.scenarios import run_scenario
+
+N_CLIENTS = 6
+SEED = 3
+STEPS = 6          # ops_per_client -> steady checkpoint steps
+SLACK = 1.25       # metadata/manifest overhead allowance per step
+
+
+def _ckpt_row(result) -> dict:
+    ck = result.client_results[f"{result.scenario}-000"]
+    rpc = result.rpc
+    total = sum(ck["per_step_wire"]) + ck["restart_wire"] + ck["branch_wire"]
+    return {
+        "per_step_wire": ck["per_step_wire"],
+        "restart_wire": ck["restart_wire"],
+        "restart_pages_scanned": ck["restart_pages_scanned"],
+        "branch_wire": ck["branch_wire"],
+        "branch_pages_added": ck["branch_pages_added"],
+        "branch_pages_written": ck["branch_pages_written"],
+        "model_bytes": ck["model_bytes"],
+        "dirty_frac": ck["dirty_frac"],
+        "total_ckpt_wire": total,
+        "dedup_lookup_rounds": rpc["dedup_lookup_rounds"],
+        "dedup_hits": rpc["dedup_hits"],
+        "dedup_hit_bytes": rpc["dedup_hit_bytes"],
+        "dedup_registered": rpc["dedup_registered"],
+        "wire_round_trips": rpc["wire_round_trips"],
+        "makespan_s": result.makespan,
+        "trace_digest": result.trace_digest,
+    }
+
+
+def _run(**kwargs):
+    return run_scenario("train_serve", N_CLIENTS, seed=SEED,
+                        n_providers=8, n_meta_shards=4,
+                        ops_per_client=STEPS, **kwargs)
+
+
+def run(rep: Reporter) -> None:
+    base = _run()
+    replay = _run()
+    twin = _run(dedup=False)
+
+    assert not base.errors, base.errors
+    assert not twin.errors, twin.errors
+    digest_match = base.trace_digest == replay.trace_digest
+    assert digest_match, (
+        f"train_serve same-seed replay diverged: "
+        f"{base.trace_digest} != {replay.trace_digest}"
+    )
+
+    b, t = _ckpt_row(base), _ckpt_row(twin)
+
+    # Gate 1: steady-state delta scaling.  Each step dirties
+    # dirty_frac of the model; the wire must carry at most that plus
+    # SLACK for metadata tree nodes, manifest and commit pages.
+    step_budget = SLACK * b["dirty_frac"] * b["model_bytes"]
+    worst_step = max(b["per_step_wire"])
+    assert worst_step <= step_budget, (
+        f"checkpoint step shipped {worst_step} B > budget "
+        f"{step_budget:.0f} B (= {SLACK} x {b['dirty_frac']:.1%} of "
+        f"{b['model_bytes']} B model)"
+    )
+
+    # Gate 2: >= 2x reduction vs the dedup-disabled twin, same seed.
+    reduction = t["total_ckpt_wire"] / max(b["total_ckpt_wire"], 1)
+    assert reduction >= 2.0, (
+        f"dedup gate failed: twin shipped {t['total_ckpt_wire']} B, "
+        f"dedup shipped {b['total_ckpt_wire']} B -> {reduction:.2f}x"
+    )
+
+    # Gate 3: branch shares by refcount, not copy — the fork save adds
+    # a few metadata/manifest pages, never ~model_pages copies.
+    assert b["branch_pages_added"] <= 4, (
+        f"branch save added {b['branch_pages_added']} pages; "
+        f"shared pages are being copied, not refcounted"
+    )
+
+    # Gate 4: one control round trip per save burst.  Bursts = STEPS
+    # steady saves + the restart save + the branch save.
+    bursts = STEPS + 2
+    assert b["dedup_lookup_rounds"] <= bursts, (
+        f"{b['dedup_lookup_rounds']} dedup lookup rounds for "
+        f"{bursts} write bursts; handshake is not batched"
+    )
+
+    # Gate 5: dedup=False leaves the index untouched.
+    twin_dedup = {k: v for k, v in twin.rpc.items()
+                  if k.startswith("dedup_") and v}
+    assert not twin_dedup, f"dedup=False twin touched the index: {twin_dedup}"
+
+    rep.add("e2e_ckpt_steady", 0.0,
+            f"n={N_CLIENTS};steps={STEPS};"
+            f"worst_step={worst_step}B;budget={step_budget:.0f}B;"
+            f"dirty={b['dirty_frac']:.1%}")
+    rep.add("e2e_ckpt_restart", 0.0,
+            f"scanned={b['restart_pages_scanned']}pages;"
+            f"wire={b['restart_wire']}B;twin_wire={t['restart_wire']}B;"
+            f"hits={b['dedup_hits']}")
+    rep.add("e2e_ckpt_branch", 0.0,
+            f"pages_added={b['branch_pages_added']};"
+            f"wire={b['branch_wire']}B")
+    rep.add("e2e_gate", 0.0,
+            f"reduction_x{reduction:.2f};lookup_rounds="
+            f"{b['dedup_lookup_rounds']}/{bursts}bursts;"
+            f"digest_match={digest_match};gate>=2.0_passed")
+
+    out = os.path.join(os.getcwd(), "BENCH_e2e.json")
+    with open(out, "w") as f:
+        json.dump({
+            "bench": "e2e",
+            "n_clients": N_CLIENTS,
+            "seed": SEED,
+            "steps": STEPS,
+            "dedup": b,
+            "twin": t,
+            "step_budget_bytes": step_budget,
+            "reduction": reduction,
+            "digest_match": digest_match,
+        }, f, indent=2)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    run(Reporter())

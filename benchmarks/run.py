@@ -13,7 +13,7 @@ import sys
 from benchmarks.common import Reporter
 
 BENCHES = ["append", "read", "meta", "space", "gc", "cache", "ckpt",
-           "kernels", "roofline", "concurrency"]
+           "kernels", "roofline", "concurrency", "e2e"]
 
 
 def main() -> None:
@@ -41,6 +41,8 @@ def main() -> None:
             from benchmarks import bench_roofline as m
         elif name == "concurrency":
             from benchmarks import bench_concurrency as m
+        elif name == "e2e":
+            from benchmarks import bench_e2e as m
         else:
             raise SystemExit(f"unknown bench {name!r}; known: {BENCHES}")
         m.run(rep)

@@ -22,12 +22,17 @@ tolerance substrate:
   included) and always reconstruct a fully consistent checkpoint, while
   later saves proceed concurrently on higher versions;
 * BRANCH forks a checkpoint lineage in O(1) bytes for ablations /
-  fine-tunes (examples/branch_experiments.py).
+  fine-tunes (examples/branch_experiments.py);
+* the delta scan's page digests are passed straight through
+  ``write_many(..., digests=...)`` as the dedup-handshake input, so a
+  deployment with content-addressed dedup matches equal pages (branch
+  twins, re-written checkpoints) without hashing anything twice.
 
-Everything below is plain numpy/bytes on the host side: device arrays
-are pulled with ``jax.device_get`` leaf-by-leaf (a real multi-host
-deployment would hand each host its own leaf shards; the interface is
-per-leaf so that change is local).
+Blob traffic is plain numpy/bytes on the host side: device arrays are
+pulled once per leaf with ``jax.device_get`` and all dirty runs of a
+save ride one batched ``write_many`` (a real multi-host deployment
+would hand each host its own leaf shards; the interface is per-leaf so
+that change is local).
 """
 
 from __future__ import annotations
@@ -134,6 +139,10 @@ class BlobCheckpointer:
         # version-manager assignment round trip and a single batched
         # completion — the scale-out write plane under the checkpointer
         dirty_writes: List[Tuple[bytes, int]] = []
+        # per run, the delta scan's page fingerprints ride along into
+        # write_many as the dedup-handshake input — the content-hash
+        # index matches on exactly these digests, nothing hashes twice
+        dirty_digests: List[List[Tuple[int, int]]] = []
         for path, leaf in leaves:
             arr = arrays[path]
             off, nbytes = layout[path]
@@ -168,6 +177,8 @@ class BlobCheckpointer:
                 if pad:
                     chunk = chunk + b"\0" * pad
                 dirty_writes.append((chunk, off + lo))
+                dirty_digests.append(
+                    [(int(dg[k, 0]), int(dg[k, 1])) for k in range(i, j)])
                 written_bytes += len(chunk)
                 pages_written += j - i
                 i = j
@@ -180,7 +191,8 @@ class BlobCheckpointer:
             })
 
         if dirty_writes:
-            self.client.write_many(self.blob_id, dirty_writes)
+            self.client.write_many(self.blob_id, dirty_writes,
+                                   digests=dirty_digests)
 
         manifest = {
             "format": 1,

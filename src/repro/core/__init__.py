@@ -13,6 +13,7 @@ See ARCHITECTURE.md for the deep dives and README.md for the map.
 
 from repro.core.blob import BlobClient, ReadError
 from repro.core.cache import NodeCache, PageCache
+from repro.core.dedup_index import DedupIndex
 from repro.core.service import BlobSeerService
 from repro.core.sim import Clock, SimDeadlock, Simulator, WallClock
 from repro.core.transport import Wire, EndpointDown
@@ -28,6 +29,7 @@ __all__ = [
     "BlobClient",
     "BlobSeerService",
     "Clock",
+    "DedupIndex",
     "EndpointDown",
     "LineageShard",
     "NodeCache",

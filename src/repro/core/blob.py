@@ -37,6 +37,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import segment_tree as st
 from repro.core.cache import NodeCache
+from repro.core.dedup_index import DedupIndex
 from repro.core.dht import MetadataDHT
 from repro.core.pages import UpdateExtent, fresh_page_id, pages_spanned
 from repro.core.provider import ProviderManager
@@ -46,6 +47,7 @@ from repro.core.version_manager import (
     VersionManager,
     owner_fn_for_lineage,
 )
+from repro.kernels.hostdigest import host_page_digest
 
 # Backwards-compatible alias: the node cache grew up and moved to
 # repro.core.cache (shared with the page cache and the accounting
@@ -75,6 +77,8 @@ class BlobClient:
         name: Optional[str] = None,
         io_workers: int = 0,
         prefetch_pages: int = 0,
+        dedup_index: Optional["DedupIndex"] = None,
+        dedup: bool = False,
     ) -> None:
         """``prefetch_pages``: how many sibling pages past a read's range
         to pull into the shared page cache on the same batched fetch
@@ -82,25 +86,29 @@ class BlobClient:
         latency this way; the descriptors come from widening the same
         segment-tree descent the read already pays for.
 
-        ``io_workers`` is accepted for backward compatibility and
-        ignored: per-endpoint batched (and, under a virtual clock,
-        pipelined) page stores replaced the thread-pool fan-out."""
+        ``io_workers`` is accepted for backward compatibility and is a
+        no-op: the thread-pool fan-out it once enabled is subsumed by
+        the batched write plane (``ProviderManager.store_pages`` groups
+        all page stores per endpoint into single round trips and
+        pipelines them under a virtual clock), which models the paper's
+        'in parallel' loops without real threads.
+
+        ``dedup_index``: the deployment's content-hash page index (see
+        :mod:`repro.core.dedup_index`); ``dedup`` sets this client's
+        default for the batched write verbs' two-phase handshake (each
+        call may override with its own ``dedup=`` keyword)."""
         self.vm = vm
         self.dht = NodeCache(dht)
         self.pm = pm
         self.wire = wire
         self.prefetch_pages = max(0, prefetch_pages)
+        self.dedup_index = dedup_index
+        self.dedup_default = bool(dedup) and dedup_index is not None
         if name is None:
             with _client_ids_lock:
                 name = f"client-{next(_client_ids):04d}"
         self.name = name
-        # io_workers is accepted for API compatibility but is a NO-OP:
-        # the thread-pool fan-out it once enabled is subsumed by the
-        # batched write plane (`ProviderManager.store_pages` groups all
-        # page stores per endpoint into single round trips, and
-        # pipelines them under a virtual clock), which models the
-        # paper's 'in parallel' loops without real threads.
-        del io_workers
+        del io_workers  # no-op, see docstring
         self._lineage_cache: Dict[str, Tuple[Tuple[str, int], ...]] = {}
 
     # ------------------------------------------------------------- small utils
@@ -301,7 +309,10 @@ class BlobClient:
         return vw
 
     # ------------------------------------------------------- batched updates
-    def append_many(self, blob_id: str, bufs: Sequence[bytes]) -> List[int]:
+    def append_many(self, blob_id: str, bufs: Sequence[bytes],
+                    *,
+                    digests: Optional[Sequence[Sequence[Tuple[int, int]]]] = None,
+                    dedup: Optional[bool] = None) -> List[int]:
         """APPEND a burst of buffers in one batched write-plane pass.
 
         Semantically identical to ``[self.append(blob_id, b) for b in
@@ -313,11 +324,17 @@ class BlobClient:
         from the burst's own buffers locally; only the first buffer can
         ever wait on a pre-burst writer.  Returns the assigned versions
         in buffer order.
+
+        ``dedup``/``digests``: see :meth:`write_many`.
         """
-        return self._update_many(blob_id, [(buf, None) for buf in bufs])
+        return self._update_many(blob_id, [(buf, None) for buf in bufs],
+                                 digests=digests, dedup=dedup)
 
     def write_many(self, blob_id: str,
-                   items: Sequence[Tuple[bytes, int]]) -> List[int]:
+                   items: Sequence[Tuple[bytes, int]],
+                   *,
+                   digests: Optional[Sequence[Sequence[Tuple[int, int]]]] = None,
+                   dedup: Optional[bool] = None) -> List[int]:
         """WRITE a batch of ``(buf, offset)`` updates in one pass.
 
         One snapshot version per item, assigned and published in list
@@ -326,11 +343,26 @@ class BlobClient:
         layer uses this for its dirty-page runs).  Offsets are
         validated against the batch's own running size — item *k* may
         extend the blob and item *k+1* may write into the extension.
+
+        ``dedup`` (default: the client's ``dedup`` constructor flag)
+        enables the two-phase dedup handshake on the burst's full
+        pages: digests go to the content-hash index in one batched
+        lookup, matched pages reuse the indexed descriptor and ship no
+        bytes.  ``dedup=False`` is byte-for-byte the plain write plane.
+        ``digests`` optionally supplies the fingerprints — item *k*'s
+        entry lists ``(d0, d1)`` per *fully covered* page in page
+        order, as computed by the ``page_digest`` kernel (the
+        checkpoint layer passes its delta-scan digests through so
+        nothing is hashed twice); without it the host twin
+        ``hostdigest.host_page_digest`` fills in.
         """
-        return self._update_many(blob_id, [(buf, off) for buf, off in items])
+        return self._update_many(blob_id, [(buf, off) for buf, off in items],
+                                 digests=digests, dedup=dedup)
 
     def _update_many(self, blob_id: str,
-                     items: Sequence[Tuple[bytes, Optional[int]]]) -> List[int]:
+                     items: Sequence[Tuple[bytes, Optional[int]]],
+                     digests: Optional[Sequence[Sequence[Tuple[int, int]]]] = None,
+                     dedup: Optional[bool] = None) -> List[int]:
         items = list(items)
         if not items:
             return []
@@ -340,6 +372,13 @@ class BlobClient:
         if any((off is None) != is_append for _buf, off in items):
             raise ValueError("mixed append/write batch (split it)")
         psize = self.vm.psize_of(blob_id)
+        use_dedup = (self.dedup_default if dedup is None else bool(dedup)) \
+            and self.dedup_index is not None
+        if digests is not None and len(digests) != len(items):
+            raise ValueError("digests must align with items")
+        # Page-ids this burst acquired from / registered with the dedup
+        # index; released if a re-stripe abandons the optimistic pages.
+        acquired: List[str] = []
         stored: List[Dict[int, Tuple[str, Tuple[str, ...], int]]] = [
             {} for _ in items
         ]
@@ -355,7 +394,9 @@ class BlobClient:
                 cursor += len(buf)
             p0_pre, _ = pages_spanned(p_off, len(buf), psize)
             plans.append((idx, self._plan_full_pages(buf, p_off, psize, p0_pre)))
-        barrier = self._store_planned(plans, stored)
+        barrier = self._store_planned(
+            plans, stored, psize=psize, digests=digests,
+            use_dedup=use_dedup, acquired=acquired)
         pd_wire = [
             tuple((pid, rel, provs, ln)
                   for rel, (pid, provs, ln) in sorted(s.items()))
@@ -373,13 +414,23 @@ class BlobClient:
             # Phase-2 re-stripe: the burst's presumed page-aligned base
             # was wrong — restripe every buffer at its real offset (the
             # page *phase* of all presumed offsets was off by the same
-            # amount, so the whole burst restripes together).
+            # amount, so the whole burst restripes together).  Abandoned
+            # optimistic pages become orphans (reclaimed by the GC
+            # inventory pass) and their dedup references are dropped;
+            # the re-striped pages carry new content phases, so any
+            # caller-supplied digests no longer apply (the host twin
+            # re-fingerprints).
+            if use_dedup and acquired:
+                self.dedup_index.unreference(acquired, peer=self.name)
+                acquired = []
             plans = []
             for idx, (buf, _off) in enumerate(items):
                 stored[idx].clear()
                 plans.append((idx, self._plan_full_pages(
                     buf, infos[idx].offset, psize, infos[idx].p0)))
-            barrier = max(barrier, self._store_planned(plans, stored))
+            barrier = max(barrier, self._store_planned(
+                plans, stored, psize=psize, use_dedup=use_dedup,
+                acquired=acquired))
 
         # -- phase 3: boundary pages, intra-batch merges resolved locally --
         prebatch_size = infos[0].prev_size
@@ -454,13 +505,61 @@ class BlobClient:
         self,
         plans: Sequence[Tuple[int, List[Tuple[int, bytes]]]],
         stored: List[Dict[int, Tuple[str, Tuple[str, ...], int]]],
+        *,
+        psize: Optional[int] = None,
+        digests: Optional[Sequence[Sequence[Tuple[int, int]]]] = None,
+        use_dedup: bool = False,
+        acquired: Optional[List[str]] = None,
     ) -> float:
         """Store many updates' planned pages in one grouped, pipelined
-        ``store_pages`` call; returns the store barrier instant."""
+        ``store_pages`` call; returns the store barrier instant.
+
+        With ``use_dedup`` the two-phase handshake runs first: one
+        batched ``lookup_and_acquire`` over every planned page's
+        fingerprint (caller-supplied ``digests`` where given, host
+        digest otherwise — planned pages are always full ``psize``
+        pages, so the two are interchangeable); hits reuse the indexed
+        descriptor and ship no bytes, misses store normally and are
+        then registered fire-and-forget.  Acquired/registered page-ids
+        are appended to ``acquired`` so a re-stripe can drop them.
+        """
         flat = [(idx, rel, payload)
                 for idx, plan in plans for rel, payload in plan]
         if not flat:
             return 0.0
+
+        if use_dedup:
+            wants: List[Tuple[int, int, int]] = []
+            for idx, plan in plans:
+                dlist = digests[idx] if digests is not None else None
+                if dlist is not None and len(dlist) != len(plan):
+                    raise ValueError(
+                        f"item {idx}: {len(dlist)} digests for "
+                        f"{len(plan)} fully covered pages")
+                for k, (_rel, payload) in enumerate(plan):
+                    if dlist is not None:
+                        d0, d1 = int(dlist[k][0]), int(dlist[k][1])
+                    else:
+                        d0, d1 = host_page_digest(payload, psize)
+                    wants.append((d0, d1, len(payload)))
+            matches = self.dedup_index.lookup_and_acquire(
+                wants, peer=self.name)
+            misses: List[int] = []
+            for j, ((idx, rel, _payload), hit) in enumerate(zip(flat, matches)):
+                if hit is None:
+                    misses.append(j)
+                else:
+                    pid, provs, length = hit
+                    stored[idx][rel] = (pid, tuple(provs), length)
+                    if acquired is not None:
+                        acquired.append(pid)
+            if not misses:
+                return 0.0
+            keep_keys = [wants[j] for j in misses]
+            flat = [flat[j] for j in misses]
+        else:
+            keep_keys = None
+
         groups = self.pm.allocate(len(flat))
         puts = [(groups[i], fresh_page_id(), payload)
                 for i, (_idx, _rel, payload) in enumerate(flat)]
@@ -468,6 +567,13 @@ class BlobClient:
         for (idx, rel, payload), (_g, pid, _p), provs in zip(flat, puts,
                                                              locations):
             stored[idx][rel] = (pid, tuple(provs), len(payload))
+        if keep_keys is not None:
+            reg = [(key, pid, tuple(provs), len(payload))
+                   for key, (_g, pid, payload), provs
+                   in zip(keep_keys, puts, locations)]
+            self.dedup_index.register(reg, peer=self.name)
+            if acquired is not None:
+                acquired.extend(pid for _key, pid, _provs, _ln in reg)
         return done_at
 
     def _store_full_pages(

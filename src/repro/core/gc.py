@@ -33,7 +33,11 @@ delete crosses the :class:`~repro.core.transport.Wire` and shows up in
    round trip per touched shard) and ``ProviderManager.delete_pages``
    (one per touched endpoint).  Deletes are idempotent; versions whose
    deletes all succeeded are finalized in the WAL, the rest are
-   re-swept next round.
+   re-swept next round.  When content-addressed dedup is in play the
+   sweep first releases the retired versions' page references through
+   the :class:`~repro.core.dedup_index.DedupIndex` — bytes are deleted
+   only at refcount zero, so an equal-content page shared by another
+   lineage survives its co-owners' retirement (see ``_sweep``).
 
 Why concurrent readers/writers are safe:
 
@@ -137,7 +141,31 @@ def _sweep(
     round — deliberately: finalizing it would leak the replica if the
     endpoint comes back, and the retry costs one batched RPC attempt
     per downed endpoint per round.
+
+    Dedup awareness: when the deployment's content-hash index has ever
+    registered a page, every pending version's pd references are first
+    released through it in ONE batched ``release_many`` (idempotent per
+    ``(blob, version, rel)``).  A page whose refcount stays positive is
+    still held by another version — not deleted, and *not* a reason to
+    defer this version; a page whose refcount reached zero and is not
+    pinned live is deleted now.  Everything else (unindexed pages,
+    zero-but-live) falls through to the pre-dedup mark-based logic, so
+    refcounts only ever *defer* deletions, never cause one the mark
+    phase would forbid.
     """
+    idx = getattr(svc, "dedup_index", None)
+    use_idx = idx is not None and idx.ever_registered
+    keep_pids: Set[str] = set()
+    drop_pids: Set[str] = set()
+    if use_idx:
+        refs = [((blob_id, rec.version, rel), pid)
+                for blob_id, recs in sorted(pending.items())
+                for rec in recs
+                for pid, rel, _provs, _length in rec.pd]
+        if refs:
+            keep_pids, drop_pids = idx.release_many(
+                refs, live_pages, peer=peer)
+
     dead_nodes: List[Tuple] = []
     dead_pages: List[Tuple[Tuple[str, ...], str]] = []
     page_bytes: Dict[str, int] = {}
@@ -160,9 +188,27 @@ def _sweep(
                     dead_nodes.append(key)
                     node_version[key] = (blob_id, rec.version)
             for pid, _rel, provs, length in rec.pd:
+                if pid in keep_pids:
+                    # refcount still positive: another version's pd holds
+                    # the page — this version is done with it
+                    continue
+                if pid in drop_pids:
+                    if pid not in page_version:
+                        dead_pages.append((tuple(provs), pid))
+                        page_bytes[pid] = length
+                        page_version[pid] = (blob_id, rec.version)
+                    continue
                 if pid in live_pages:
                     has_live.add((blob_id, rec.version))
                 elif pid not in page_version:
+                    if use_idx:
+                        # mark-dead but possibly resurrected: a lookup
+                        # may have re-acquired the page since the mark
+                        # (zero-refcount entries stay matchable) — claim
+                        # it under the index lock or leave it alone
+                        _claimed, resurrected = idx.claim_dead((pid,))
+                        if resurrected:
+                            continue  # new holder's release owns deletion
                     dead_pages.append((tuple(provs), pid))
                     page_bytes[pid] = length
                     page_version[pid] = (blob_id, rec.version)
@@ -223,6 +269,12 @@ def collect_orphans(
     that are not journaled anywhere and are older than ``grace`` on the
     deployment clock.  The grace window is what makes it safe against
     in-flight writers between ``store_page`` and ``assign_version``.
+
+    With dedup deployed, the inventory also reconciles the content-hash
+    index: doomed pages are run through ``orphan_guard`` first — a page
+    some in-flight writer has acquired (refcount ≥ 2) survives, a page
+    whose only reference is its storer's now-provably-stale one is
+    unindexed and deleted.
     """
     referenced = svc.vm.all_page_ids()
     now = svc.wire.clock.now()
@@ -234,6 +286,12 @@ def collect_orphans(
             continue
         doomed.extend(((prov.pid,), pid) for pid, stored_at in listing
                       if pid not in referenced and now - stored_at >= grace)
+    idx = getattr(svc, "dedup_index", None)
+    if doomed and idx is not None and idx.ever_registered:
+        kept = idx.orphan_guard([pid for _provs, pid in doomed], peer=peer)
+        if kept:
+            doomed = [(provs, pid) for provs, pid in doomed
+                      if pid not in kept]
     if not doomed:
         return {"orphan_pages": 0, "orphan_bytes": 0}
     # delete through the provider manager so the sweep counters in

@@ -370,6 +370,200 @@ def _gc_mixed_program(env: ScenarioEnv, i: int):
     return reader_prog
 
 
+def _setup_train_serve(env: ScenarioEnv) -> None:
+    """Blob-backed train/serve loop fixture (the integrated e2e workload).
+
+    Driver-thread setup (free in virtual time): a token corpus the
+    trainers will stream through ``data/pipeline.py`` shards, a model
+    state sized ``TS_MODEL_PAGES`` pages, and its step-0 checkpoint
+    committed through ``blobckpt`` — whose delta-scan digests feed the
+    dedup handshake during the measured phase.  Lazy imports keep the
+    scenario library's module surface jax-free for every other
+    scenario.
+    """
+    import numpy as np
+
+    from repro.checkpoint.blobckpt import BlobCheckpointer
+    from repro.data.pipeline import CorpusWriter
+
+    cfg = {
+        "model_pages": env.state.get("model_pages", 256),
+        "dirty_pages": env.state.get("dirty_pages", 32),
+        "steps": max(2, env.ops_per_client),
+        "header_pages": 4,
+        "batch": 2,
+        "seq_len": 127,
+    }
+    env.state["cfg"] = cfg
+
+    corpus_client = env.client("corpus-setup")
+    writer = CorpusWriter(corpus_client, psize=env.psize)
+    words = env.psize // 4
+    rng = np.random.default_rng(1234)
+    writer.append_tokens(
+        rng.integers(0, 50_000, size=4 * words, dtype=np.int32))
+    env.state["corpus"] = writer.blob_id
+
+    # model state: one flat int32 leaf, TS_MODEL_PAGES pages of psize
+    w = np.zeros(cfg["model_pages"] * words, dtype=np.int32)
+    w[::words] = np.arange(cfg["model_pages"])
+    env.state["model"] = {"w": w}
+
+    ckpt = BlobCheckpointer(env.client("ckpt-writer"), psize=env.psize,
+                            header_pages=cfg["header_pages"])
+    ckpt.save(env.state["model"], step=0)
+    env.client("retention-setup").set_retention(ckpt.blob_id, keep_last=6)
+    env.state["ckpt"] = ckpt
+    env.state["ckpt_blob"] = ckpt.blob_id
+
+
+def _train_serve_program(env: ScenarioEnv, i: int):
+    """Roles: client 0 is the training checkpointer (the measured one),
+    client 1 runs GC rounds, even clients serve reads of recent
+    checkpoints through the shared page cache, odd clients are trainers
+    streaming disjoint corpus shards.
+
+    The checkpointer's result carries the bytes-on-wire ledger the
+    ``bench_e2e`` gate asserts: per steady step it dirties exactly
+    ``dirty_pages`` pages with step-unique content (the honest delta —
+    never dedupable), then re-saves the full state from a fresh
+    checkpointer with no digest cache (restart: every page *looks*
+    dirty, the content-hash index absorbs all of it), then branches and
+    saves a one-page mutation (fork: shared pages by refcount, not
+    copy).
+    """
+    cfg = env.state["cfg"]
+
+    def _provider_in_bytes() -> int:
+        return sum(env.svc.wire.stats(p.pid).bytes_in
+                   for p in env.svc.pm.all_providers())
+
+    if i == 0:
+
+        def ckpt_prog() -> dict:
+            import numpy as np
+
+            from repro.checkpoint.blobckpt import BlobCheckpointer
+
+            clock = env.svc.clock
+            ckpt = env.state["ckpt"]
+            model = env.state["model"]
+            w = model["w"]
+            words = env.psize // 4
+            per_step_wire: List[int] = []
+            payload_bytes = 0
+            for step in range(1, cfg["steps"] + 1):
+                clock.sleep(0.05)
+                for j in range(cfg["dirty_pages"]):
+                    p = (step * 7 + j * 5) % cfg["model_pages"]
+                    w[p * words + 1] = step * 100_000 + p
+                before = _provider_in_bytes()
+                stats = ckpt.save(model, step=step)
+                per_step_wire.append(_provider_in_bytes() - before)
+                payload_bytes += stats.written_bytes
+            # restart: fresh checkpointer, no digest cache — all pages
+            # scan dirty; with dedup on, the handshake ships none of them
+            clock.sleep(0.05)
+            ck2 = BlobCheckpointer(env.client("ckpt-restart"),
+                                   blob_id=ckpt.blob_id, psize=env.psize,
+                                   header_pages=cfg["header_pages"])
+            before = _provider_in_bytes()
+            s_restart = ck2.save(model, step=cfg["steps"] + 1)
+            restart_wire = _provider_in_bytes() - before
+            # branch + one-page mutation: shared pages stay shared
+            clock.sleep(0.05)
+            child = ck2.branch()
+            w[1] = -1
+            pages_before = env.svc.storage_report()["pages"]
+            before = _provider_in_bytes()
+            s_branch = child.save(model, step=cfg["steps"] + 2)
+            branch_wire = _provider_in_bytes() - before
+            branch_pages_added = (env.svc.storage_report()["pages"]
+                                  - pages_before)
+            return {
+                "ops": cfg["steps"] + 2,
+                "bytes": payload_bytes,
+                "per_step_wire": per_step_wire,
+                "restart_wire": restart_wire,
+                "restart_pages_scanned": s_restart.pages_written,
+                "branch_wire": branch_wire,
+                "branch_pages_added": branch_pages_added,
+                "branch_pages_written": s_branch.pages_written,
+                "model_bytes": cfg["model_pages"] * env.psize,
+                "dirty_frac": cfg["dirty_pages"] / cfg["model_pages"],
+            }
+
+        return ckpt_prog
+
+    if i == 1:
+
+        def gc_prog() -> dict:
+            from repro.core.gc import collect_garbage
+
+            clock = env.svc.clock
+            rounds = swept = 0
+            for _ in range(cfg["steps"] + 2):
+                clock.sleep(0.07)
+                try:
+                    stats = collect_garbage(env.svc, client=f"gc{i:03d}",
+                                            orphan_grace=None)
+                except EndpointDown:
+                    continue
+                rounds += 1
+                swept += stats["swept_pages"]
+            return {"ops": rounds, "bytes": 0, "swept_pages": swept}
+
+        return gc_prog
+
+    if i % 2 == 0:
+
+        def serve_prog() -> dict:
+            from repro.checkpoint.blobckpt import BlobCheckpointer
+
+            c = env.client(f"serve{i:03d}")
+            reader = BlobCheckpointer(c, blob_id=env.state["ckpt_blob"],
+                                      psize=env.psize,
+                                      header_pages=cfg["header_pages"])
+            clock = env.svc.clock
+            done = bytes_read = retired_retries = 0
+            for k in range(cfg["steps"]):
+                clock.sleep(0.03 + 0.001 * i)
+                try:
+                    manifest, mv = reader.read_manifest()
+                    leaf = manifest["leaves"][0]
+                    off = leaf["offset"] + ((i + k) % cfg["model_pages"]) \
+                        * env.psize
+                    data = c.read(env.state["ckpt_blob"], mv, off, env.psize)
+                    bytes_read += len(data)
+                    done += 1
+                except RetiredVersion:
+                    retired_retries += 1  # raced the retention window: retry
+            return {"ops": done, "bytes": bytes_read,
+                    "retired_retries": retired_retries}
+
+        return serve_prog
+
+    def trainer_prog() -> dict:
+        from repro.data.pipeline import ShardedReader
+
+        c = env.client(f"train{i:03d}")
+        n_shards = max(1, (env.n_clients - 1) // 2)
+        shard = (i - 3) // 2 % n_shards
+        reader = ShardedReader(c, env.state["corpus"], batch=cfg["batch"],
+                               seq_len=cfg["seq_len"], shard=shard,
+                               n_shards=n_shards)
+        clock = env.svc.clock
+        done = bytes_read = 0
+        for _ in range(cfg["steps"]):
+            xs, ys = reader.next_batch()
+            bytes_read += xs.nbytes + ys.nbytes
+            done += 1
+            clock.sleep(0.04)
+        return {"ops": done, "bytes": bytes_read}
+
+    return trainer_prog
+
+
 SCENARIOS: Dict[str, Scenario] = {
     "readers": Scenario(
         "readers",
@@ -413,6 +607,15 @@ SCENARIOS: Dict[str, Scenario] = {
         "GC epochs racing a mixed pinned-reader/appender workload "
         "(distributed mark/sweep while clients are active)",
         _setup_gc_mixed, _gc_mixed_program,
+    ),
+    "train_serve": Scenario(
+        "train_serve",
+        "Integrated train/serve loop: trainers stream corpus shards, the "
+        "checkpointer commits deltas through the dedup handshake, a "
+        "serving tier reads recent checkpoints via the page cache, GC "
+        "races everyone (virtual clock, deterministic)",
+        _setup_train_serve, _train_serve_program,
+        env_defaults={"dedup": True},
     ),
 }
 

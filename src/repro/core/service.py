@@ -15,6 +15,7 @@ from typing import Dict, List, Optional
 
 from repro.core.blob import BlobClient
 from repro.core.cache import PageCache
+from repro.core.dedup_index import DedupIndex
 from repro.core.dht import MetadataDHT
 from repro.core.provider import DataProvider, ProviderManager
 from repro.core.sim import Clock
@@ -50,6 +51,7 @@ class BlobSeerService:
         clock: Optional[Clock] = None,
         page_cache_bytes: int = DEFAULT_PAGE_CACHE_BYTES,
         read_prefetch_pages: int = 0,
+        dedup: bool = False,
     ) -> None:
         """``clock``: scheduling backend for every blocking point in the
         deployment (wall-clock threads by default; pass a
@@ -60,7 +62,13 @@ class BlobSeerService:
         ``page_cache_bytes``: byte budget of the shared read-path page
         cache (0 disables it).  ``read_prefetch_pages``: default
         sibling-page prefetch depth handed to every client this service
-        creates (see :class:`~repro.core.blob.BlobClient`)."""
+        creates (see :class:`~repro.core.blob.BlobClient`).
+
+        ``dedup``: default for every client's write-burst dedup
+        handshake.  The content-hash index itself is ALWAYS deployed
+        (its counters report zero and its GC verbs self-disable while
+        nothing was ever registered), so flipping the flag changes
+        client behavior only — never the deployment topology."""
         if wire is not None:
             self.wire = wire
         elif clock is not None:
@@ -71,12 +79,15 @@ class BlobSeerService:
         self.vm = VersionManager(wire=self.wire, wal_path=wal_path)
         self.dht = MetadataDHT(self.wire, n_meta_shards, replication=meta_replication)
         self.page_cache = PageCache(page_cache_bytes, clock=self.clock)
+        self.dedup_index = DedupIndex(self.wire)
+        self.dedup = dedup
         self.pm = ProviderManager(
             self.wire,
             strategy=placement,
             replication=data_replication,
             heartbeat_timeout=heartbeat_timeout,
             page_cache=self.page_cache,
+            dedup_index=self.dedup_index,
         )
         # GC/cache coherence: evict a retired version's pages at
         # retire-intent time (epoch bump), before any sweep delete.
@@ -112,6 +123,8 @@ class BlobSeerService:
             io_workers=self.io_workers,
             prefetch_pages=(self.read_prefetch_pages
                             if prefetch_pages is None else prefetch_pages),
+            dedup_index=self.dedup_index,
+            dedup=self.dedup,
         )
 
     def _on_retire_intent(self, blob_id, versions, epoch, page_ids) -> None:
@@ -285,40 +298,63 @@ class BlobSeerService:
         service deliberately keeps no client registry); and
         ``wire_local_hit_bytes`` is the byte volume page-cache hits
         kept off the wire (compare with ``storage_report()['wire_bytes']``).
+
+        ``dedup_*`` exposes the content-hash index's handshake:
+        ``dedup_lookup_rounds`` batched digest probes (≤1 per write
+        burst), ``dedup_hits``/``dedup_hit_bytes`` pages (and payload
+        bytes) that matched and never shipped, ``dedup_registered`` new
+        entries, ``dedup_released``/``dedup_dropped`` the GC-side
+        refcount traffic.
+
+        Every counter family lives in one registry (see
+        ``_counter_families``), so ``rpc_report`` and
+        ``reset_rpc_counters`` can never drift apart — a family present
+        in one is present in the other, which ``tests/test_dedup.py``
+        asserts key-for-key.
         """
-        report: Dict[str, int] = {
-            "wire_round_trips": self.wire.total_round_trips(),
-            "wire_local_hits": self.wire.total_local_hits(),
-            "wire_local_hit_bytes": self.wire.total_local_hit_bytes(),
-        }
-        for k, v in self.dht.rpc_counters().items():
-            report[f"dht_{k}"] = v
-        for k, v in self.vm.rpc_counters().items():
-            report[f"vm_{k}"] = v
-        report["provider_read_rounds"] = self.pm.read_rounds
-        report["provider_read_pages"] = self.pm.read_pages
-        report["provider_sweep_rounds"] = self.pm.sweep_rounds
-        report["provider_swept_pages"] = self.pm.swept_pages
-        report["provider_write_rounds"] = self.pm.write_rounds
-        report["provider_write_pages"] = self.pm.write_pages
-        for k, v in self.page_cache.counters().items():
-            report[f"page_cache_{k}"] = v
+        report: Dict[str, int] = {}
+        for prefix, get, _reset in self._counter_families():
+            for k, v in get().items():
+                report[f"{prefix}{k}"] = v
+        # Derived entries (no reset of their own; zeroed via dht_*):
         cached_keys = report["dht_get_keys_cached"]
         report["node_cache_hits"] = cached_keys
         report["node_cache_hit_bytes"] = cached_keys * self.dht.node_nbytes
         return report
+
+    def _counter_families(self):
+        """The single registry of every RPC/cache counter family:
+        ``(report_prefix, get_counters, reset_counters)`` per family.
+        Late-bound through ``self`` so :meth:`restore`'s version-manager
+        replacement is picked up automatically."""
+        return [
+            ("wire_", lambda: {
+                "round_trips": self.wire.total_round_trips(),
+                "local_hits": self.wire.total_local_hits(),
+                "local_hit_bytes": self.wire.total_local_hit_bytes(),
+            }, self.wire.reset_accounting),
+            ("dht_", lambda: self.dht.rpc_counters(),
+             lambda: self.dht.reset_rpc_counters()),
+            ("vm_", lambda: self.vm.rpc_counters(),
+             lambda: self.vm.reset_rpc_counters()),
+            ("provider_", lambda: self.pm.rpc_counters(),
+             lambda: self.pm.reset_counters()),
+            ("page_cache_", lambda: self.page_cache.counters(),
+             lambda: self.page_cache.reset_counters()),
+            ("dedup_", lambda: self.dedup_index.rpc_counters(),
+             lambda: self.dedup_index.reset_rpc_counters()),
+        ]
 
     def reset_rpc_counters(self) -> None:
         """Zero every RPC/cache counter (cache *contents* are kept —
         a counter reset brackets a measurement, it must not change the
         wire schedule).  Per-client ``NodeCache`` counters are the
         clients' own; the deployment-level view they feed
-        (``dht_get_keys_cached``) is reset here."""
-        self.dht.reset_rpc_counters()
-        self.vm.reset_rpc_counters()
-        self.pm.reset_counters()
-        self.wire.reset_accounting()
-        self.page_cache.reset_counters()
+        (``dht_get_keys_cached``) is reset here.  Iterates the same
+        registry ``rpc_report`` reads, so no family can be reported but
+        not reset (or vice versa)."""
+        for _prefix, _get, reset in self._counter_families():
+            reset()
 
     def storage_report(self) -> Dict[str, object]:
         """Deployment-wide space accounting: provider count, stored page

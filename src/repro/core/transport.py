@@ -57,6 +57,16 @@ VM_CTRL_MSG_BYTES = 96      # one singleton control-plane verb
 VM_ASSIGN_REQ_BYTES = 128   # one request inside assign_versions_many
 VM_COMPLETE_CMD_BYTES = 48  # one command inside metadata_complete_many
 
+# Wire-cost model of the dedup index (``core/dedup_index.py``).  The
+# lookup is the one blocking control round trip the handshake adds per
+# write burst: all of a burst's digests ride ONE `transfer_batch`, per
+# item below.  Registrations and plain decrements are fire-and-forget
+# (they never gate the writer); GC's release batch is blocking because
+# the sweeper needs the refcount verdicts back.
+DEDUP_LOOKUP_REQ_BYTES = 24    # one (digest64, length) probe in lookup_and_acquire
+DEDUP_REGISTER_REQ_BYTES = 48  # one (digest64, page descriptor) in register
+DEDUP_RELEASE_REQ_BYTES = 24   # one reference-drop command in release/unreference
+
 
 @dataclass
 class WireStats:

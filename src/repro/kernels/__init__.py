@@ -7,9 +7,17 @@
 * ``linear_scan`` — chunked diagonal linear recurrence (RG-LRU / xLSTM).
 
 Use ``repro.kernels.ops`` (backend dispatch); ``repro.kernels.ref``
-holds the pure-jnp oracles.
+holds the pure-jnp oracles; ``repro.kernels.hostdigest`` is the
+numpy-only digest twin the core write path may import without dragging
+jax in (submodules load lazily for the same reason).
 """
 
-from repro.kernels import ops, ref
+import importlib
 
-__all__ = ["ops", "ref"]
+__all__ = ["ops", "ref", "hostdigest"]
+
+
+def __getattr__(name):  # PEP 562: lazy submodule access
+    if name in __all__:
+        return importlib.import_module(f"repro.kernels.{name}")
+    raise AttributeError(f"module 'repro.kernels' has no attribute {name!r}")

@@ -2,8 +2,13 @@
 
 The checkpoint layer fingerprints every page of device-resident training
 state to detect copy-on-write deltas (only changed pages are re-written
-to BlobSeer providers).  At multi-TB state sizes this scan must run at
-HBM bandwidth on the chip, not on the host — hence a TPU kernel.
+to BlobSeer providers), and the same fingerprints feed the dedup
+handshake: ``blobckpt`` passes them to ``BlobClient.write_many`` so the
+content-hash index can match equal pages without re-hashing.  At
+multi-TB state sizes this scan must run at HBM bandwidth on the chip,
+not on the host — hence a TPU kernel.  Off-TPU callers with plain bytes
+use the numpy twin ``hostdigest.host_page_digest`` (same constants,
+same padding, bit-identical results).
 
 Math (same as ``ref.ref_page_digest``): for each page ``p`` and each of
 two independent odd multipliers ``A_m``::

@@ -7,29 +7,18 @@ and they double as the CPU execution path in ``ops.py``.
 
 from __future__ import annotations
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
 
-# Digest constants: two independent odd multipliers (Knuth & xxHash primes)
-# and an additive salt so zero pages don't hash to zero.
-DIGEST_MULTS = (2654435761, 2246822519)
-DIGEST_SALT = 0x9E3779B9
+# Digest constants and host weight table live in ``hostdigest`` (numpy-only,
+# shared with the dedup handshake); re-exported here for the kernels.
+from repro.kernels.hostdigest import (  # noqa: F401  (re-export)
+    DIGEST_MULTS,
+    DIGEST_SALT,
+    digest_weights,
+)
+
 U32 = jnp.uint32
-
-
-def digest_weights(n_words: int) -> np.ndarray:
-    """Polynomial weights ``A_m^(n_words-1-i) mod 2^32`` as (2, n_words) u32."""
-    out = np.empty((2, n_words), dtype=np.uint32)
-    for m, mult in enumerate(DIGEST_MULTS):
-        w = np.empty(n_words, dtype=np.uint64)
-        acc = np.uint64(1)
-        for i in range(n_words - 1, -1, -1):
-            w[i] = acc
-            acc = (acc * np.uint64(mult)) & np.uint64(0xFFFFFFFF)
-        out[m] = w.astype(np.uint32)
-    return out
 
 
 def ref_page_digest(pages_u32: jax.Array) -> jax.Array:

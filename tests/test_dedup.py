@@ -1,0 +1,234 @@
+"""Content-addressed dedup: digest twins, handshake, refcount GC.
+
+Covers the PR contract end to end at unit scale:
+
+* the numpy-only ``hostdigest`` twin is bit-identical to the kernel
+  reference over page sizes, tails and dtypes;
+* ``write_many`` with dedup fingerprints every page, batches exactly
+  one lookup round per burst, ships only unmatched pages, and reuses
+  descriptors for matched ones;
+* ``dedup=False`` never touches the index (the pre-dedup wire
+  schedule survives untouched);
+* refcounted pages survive their co-owner's retirement and are
+  deleted only when the last referencing version retires;
+* a restarted checkpointer (no digest cache) re-ships nothing the
+  index already holds;
+* the RPC counter registry: ``rpc_report()`` and
+  ``reset_rpc_counters()`` walk the same family list, so no counter
+  can be reported but never reset (or vice versa).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import BlobSeerService
+from repro.core.gc import collect_garbage
+from repro.kernels.hostdigest import host_page_digest
+
+PSIZE = 4096
+
+
+def _page(tag: int, n: int = PSIZE) -> bytes:
+    return bytes([tag % 251 + 1]) * n
+
+
+def _svc(**kw):
+    kw.setdefault("n_providers", 4)
+    kw.setdefault("n_meta_shards", 2)
+    return BlobSeerService(**kw)
+
+
+# ---------------------------------------------------------------------------
+# digest twins
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("psize,total", [
+    (64 * 1024, 3 * 64 * 1024),   # whole pages, block-aligned
+    (4096, 4096 * 2 + 100),       # short tail page
+    (100, 7 * 100),               # page smaller than one digest block
+    (8, 8),                       # degenerate single tiny page
+])
+def test_host_digest_matches_kernel_ref(psize, total):
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.kernels.ops import as_page_words
+    from repro.kernels.ref import ref_page_digest
+
+    rng = np.random.default_rng(total)
+    data = rng.integers(0, 256, size=total, dtype=np.uint8).tobytes()
+
+    words = as_page_words(jnp.asarray(np.frombuffer(data, np.uint8)), psize)
+    kernel = np.asarray(ref_page_digest(words))
+
+    n_pages = -(-len(data) // psize)
+    for p in range(n_pages):
+        host = host_page_digest(data[p * psize:(p + 1) * psize], psize)
+        assert host == (int(kernel[p, 0]), int(kernel[p, 1]))
+
+
+def test_host_digest_distinguishes_order_and_length():
+    a = host_page_digest(b"\x01\x02\x03\x04", PSIZE)
+    b = host_page_digest(b"\x04\x03\x02\x01", PSIZE)
+    assert a != b  # polynomial digest is order-sensitive
+    # zero-padding alone must not collide across payload lengths...
+    assert host_page_digest(b"\x01\x00", PSIZE) == \
+        host_page_digest(b"\x01\x00\x00", PSIZE)
+    # ...which is why the index key includes the payload length too.
+
+
+# ---------------------------------------------------------------------------
+# two-phase handshake on the write path
+# ---------------------------------------------------------------------------
+
+
+def test_write_many_dedup_one_lookup_round_per_burst():
+    svc = _svc(dedup=True)
+    c = svc.client("w")
+    bid = c.create(psize=PSIZE)
+    bufs = [_page(t) for t in range(4)]
+
+    c.append_many(bid, bufs)
+    r1 = svc.rpc_report()
+    assert r1["dedup_lookup_rounds"] == 1       # one batched probe
+    assert r1["dedup_lookup_keys"] == 4
+    assert r1["dedup_hits"] == 0
+    assert r1["dedup_registered"] == 4
+    pages_before = svc.storage_report()["pages"]
+
+    # identical burst: every page matches, zero new pages stored
+    v2 = c.append_many(bid, bufs)[-1]
+    r2 = svc.rpc_report()
+    assert r2["dedup_lookup_rounds"] == 2
+    assert r2["dedup_hits"] == 4
+    assert r2["dedup_hit_bytes"] == 4 * PSIZE
+    assert svc.storage_report()["pages"] == pages_before
+
+    # both versions read back correctly through the shared pages
+    assert c.read(bid, v2, 0, 8 * PSIZE) == b"".join(bufs) * 2
+
+
+def test_write_many_accepts_precomputed_digests():
+    svc = _svc(dedup=True)
+    c = svc.client("w")
+    bid = c.create(psize=PSIZE)
+    bufs = [_page(9), _page(10)]
+    digests = [[host_page_digest(b, PSIZE)] for b in bufs]
+    c.write_many(bid, [(bufs[0], 0), (bufs[1], PSIZE)], digests=digests)
+    # same content again, digests passed through: all hits
+    v = c.write_many(bid, [(bufs[1], 0), (bufs[0], PSIZE)],
+                     digests=[digests[1], digests[0]])[-1]
+    rpc = svc.rpc_report()
+    assert rpc["dedup_hits"] == 2
+    assert c.read(bid, v, 0, 2 * PSIZE) == bufs[1] + bufs[0]
+
+
+def test_dedup_disabled_never_touches_index():
+    svc = _svc()        # dedup defaults off; index deployed but idle
+    c = svc.client("w")
+    bid = c.create(psize=PSIZE)
+    bufs = [_page(t) for t in range(3)]
+    c.append_many(bid, bufs)
+    c.append_many(bid, bufs)    # identical content, still shipped
+    # digests passed but dedup off: ignored, not an error
+    c.write_many(bid, [(bufs[0], 0)],
+                 digests=[[host_page_digest(bufs[0], PSIZE)]])
+    rpc = svc.rpc_report()
+    assert not any(v for k, v in rpc.items() if k.startswith("dedup_"))
+    assert not svc.dedup_index.ever_registered
+    # GC takes the fast path too: no release/guard RPCs ever issued
+    collect_garbage(svc, client="gc")
+    assert svc.rpc_report()["dedup_release_rounds"] == 0
+
+
+# ---------------------------------------------------------------------------
+# refcount-aware GC
+# ---------------------------------------------------------------------------
+
+
+def test_shared_pages_survive_co_owner_retirement():
+    svc = _svc(dedup=True)
+    c = svc.client("w")
+    a = c.create(psize=PSIZE)
+    b = c.create(psize=PSIZE)
+    shared = [_page(t) for t in range(3)]
+    c.append_many(a, shared)
+    c.append_many(b, shared)            # all hits: refcounts now 2
+    assert svc.rpc_report()["dedup_hits"] == 3
+    shared_pids = set(svc.dedup_index.indexed_pages())
+    assert all(svc.dedup_index.refcount(p) == 2 for p in shared_pids)
+
+    # retire blob a's versions (overwrite everything, GC the history):
+    # shared pages must survive at refcount 1
+    c.set_retention(a, keep_last=1)
+    c.write(a, _page(50) * 3, 0)        # v4 references none of v1..v3
+    collect_garbage(svc, client="gc")
+    assert c.read(b, 3, 0, 3 * PSIZE) == b"".join(shared)
+    assert all(svc.dedup_index.refcount(p) == 1 for p in shared_pids)
+    assert svc.rpc_report()["dedup_dropped"] == 0
+
+    # retire blob b's versions too: last reference gone, bytes deleted
+    c.set_retention(b, keep_last=1)
+    c.write(b, _page(51) * 3, 0)
+    collect_garbage(svc, client="gc")
+    assert not shared_pids & set(svc.dedup_index.indexed_pages())
+    assert svc.rpc_report()["dedup_dropped"] >= 3
+    # only the two overwrites' pages remain in the store
+    assert svc.storage_report()["pages"] == 6
+
+
+def test_restart_checkpoint_ships_no_known_pages():
+    from repro.checkpoint.blobckpt import BlobCheckpointer
+
+    svc = _svc(dedup=True)
+    model = {"w": np.arange(8 * PSIZE // 4, dtype=np.int32)}
+    ck = BlobCheckpointer(svc.client("ck"), psize=PSIZE, header_pages=2)
+    ck.save(model, step=0)
+
+    def provider_in():
+        return sum(svc.wire.stats(p.pid).bytes_in
+                   for p in svc.pm.all_providers())
+
+    # fresh checkpointer, no digest cache: every page scans dirty, but
+    # the handshake matches all model leaves — only the manifest and
+    # commit-pointer pages (never dedupable) ship bytes
+    ck2 = BlobCheckpointer(svc.client("ck2"), blob_id=ck.blob_id,
+                           psize=PSIZE, header_pages=2)
+    before = provider_in()
+    stats = ck2.save(model, step=1)
+    assert stats.pages_written == 8     # all scanned dirty...
+    assert provider_in() - before <= 3 * PSIZE   # ...~none shipped
+    got = ck2.restore({"w": np.zeros(8 * PSIZE // 4, dtype=np.int32)})
+    assert np.array_equal(got["w"], model["w"])
+
+
+# ---------------------------------------------------------------------------
+# counter-registry audit (report and reset walk the same families)
+# ---------------------------------------------------------------------------
+
+
+def test_rpc_counter_registry_reset_covers_report():
+    svc = _svc(dedup=True)
+    c = svc.client("w")
+    bid = c.create(psize=PSIZE)
+    c.append_many(bid, [_page(1), _page(1)])
+    c.read(bid, 1, 0, PSIZE)
+    collect_garbage(svc, client="gc")
+
+    before = svc.rpc_report()
+    assert any(before.values())         # workload actually counted
+    registry_keys = {f"{prefix}{k}"
+                     for prefix, get, _reset in svc._counter_families()
+                     for k in get()}
+    svc.reset_rpc_counters()
+    after = svc.rpc_report()
+
+    # same key set before and after, every raw counter back to zero,
+    # and every reported raw counter belongs to a registered family
+    # (derived node_cache_* keys are computed from dht_ counters;
+    # page_cache occupancy gauges survive reset by design — a counter
+    # reset brackets a measurement, it must not evict cache contents)
+    assert set(before) == set(after)
+    derived = {"node_cache_hits", "node_cache_hit_bytes"}
+    gauges = {"page_cache_used_bytes", "page_cache_entries"}
+    assert set(after) - derived == registry_keys
+    assert not any(v for k, v in after.items() if k not in gauges), after

@@ -31,6 +31,7 @@ REPO = Path(__file__).resolve().parent.parent
 SNIPPET_FILES = [
     "docs/write-path.md",
     "docs/concurrency.md",
+    "docs/checkpoint.md",
 ]
 
 _FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
