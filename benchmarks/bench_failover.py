@@ -1,0 +1,156 @@
+"""HA control plane benchmark: VM leader death mid-append-burst.
+
+The paper (§3.1) centralizes version assignment in one version manager
+and concedes it is a single point of failure.  The HA control plane
+replicates each lineage shard's journal to follower endpoints and fails
+over by lease takeover, so this benchmark kills the leader of one
+lineage mid-``append_many`` burst and asserts the contract:
+
+* the burst completes — zero failed client ops, zero published
+  versions lost, zero versions double-assigned (checked by exact
+  version cover per lineage: the union of every client's assigned
+  versions must be exactly ``1..N``),
+* exactly one failover fires (the killed lineage's; healthy lineages
+  never elect),
+* untouched lineages see **zero added publication round trips**: their
+  leader endpoints' wire request counts are identical between the
+  no-kill baseline and the kill run,
+* same-seed kill runs replay identical trace digests (the failover
+  path is deterministic under the virtual clock).
+
+Emits ``BENCH_failover.json`` with a ``gate`` dict CI asserts on.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from collections import defaultdict
+
+from benchmarks.common import Reporter
+from repro.core.scenarios import build_env, run_scenario
+
+N_CLIENTS = 12
+OPS_PER_CLIENT = 3
+SEED = 11
+KILL_FRACTION = 0.4   # of the baseline makespan — mid-burst, not at a seam
+
+
+def _run(failures=()):
+    env = build_env(N_CLIENTS, seed=SEED, ops_per_client=OPS_PER_CLIENT,
+                    scenario="vm_failover")
+    result = run_scenario("vm_failover", N_CLIENTS, seed=SEED, env=env,
+                          failures=failures)
+    return env, result
+
+
+def _version_cover(result) -> dict:
+    """Per-lineage sorted version lists across all clients."""
+    cover = defaultdict(list)
+    for res in result.client_results.values():
+        if isinstance(res, dict) and "versions" in res:
+            cover[res["lineage"]].extend(res["versions"])
+    return {lin: sorted(vs) for lin, vs in cover.items()}
+
+
+def _leader_requests(env) -> dict:
+    """Wire request count at each lineage's current leader endpoint.
+
+    For untouched lineages (the only ones the gate compares) the
+    current leader is still the original one, so the count is
+    comparable across runs."""
+    out = {}
+    for idx, bid in enumerate(env.state["blobs"]):
+        ep = env.svc.vm.leader_endpoint(bid)
+        out[idx] = (ep, env.svc.wire.stats(ep).requests)
+    return out
+
+
+def run(rep: Reporter) -> None:
+    env0, base = _run()
+    assert not base.errors, base.errors
+    kill_time = KILL_FRACTION * base.makespan
+
+    failures = [(kill_time, "vm-leader:0")]
+    env1, kill = _run(failures)
+    env2, replay = _run(failures)
+
+    cover = _version_cover(kill)
+    expected_per_lineage = {
+        lin: len(vs) for lin, vs in _version_cover(base).items()
+    }
+    lost = doubled = 0
+    for lin, vs in sorted(cover.items()):
+        want = list(range(1, expected_per_lineage[lin] + 1))
+        doubled += len(vs) - len(set(vs))
+        lost += len(set(want) - set(vs))
+
+    base_reqs = _leader_requests(env0)
+    kill_reqs = _leader_requests(env1)
+    # lineage 0 is the killed one; every other lineage's leader must
+    # have served exactly the same number of requests as the baseline.
+    untouched_delta = sum(
+        abs(kill_reqs[i][1] - base_reqs[i][1])
+        for i in base_reqs if i != 0
+    )
+
+    gate = {
+        "lost_published_versions": lost,
+        "double_assigned": doubled,
+        "failed_ops": len(kill.errors),
+        "failovers": kill.rpc["vm_failovers"],
+        "untouched_rpc_delta": untouched_delta,
+        "digest_match": kill.trace_digest == replay.trace_digest,
+        "completed": kill.ops == base.ops,
+    }
+    assert gate["lost_published_versions"] == 0, gate
+    assert gate["double_assigned"] == 0, gate
+    assert gate["failed_ops"] == 0, gate
+    assert gate["failovers"] == 1, gate
+    assert gate["untouched_rpc_delta"] == 0, gate
+    assert gate["digest_match"], gate
+    assert gate["completed"], gate
+
+    rep.add("failover_baseline", 0.0,
+            f"n={N_CLIENTS};ops={base.ops};makespan={base.makespan:.4f}s;"
+            f"wal_records={base.rpc['vm_wal_records']}")
+    rep.add("failover_kill", 0.0,
+            f"kill_t={kill_time:.4f}s;ops={kill.ops};"
+            f"makespan={kill.makespan:.4f}s;"
+            f"failovers={gate['failovers']};"
+            f"slowdown_x{kill.makespan / max(base.makespan, 1e-12):.2f}")
+    rep.add("failover_gate", 0.0,
+            f"lost={lost};doubled={doubled};failed={gate['failed_ops']};"
+            f"untouched_delta={untouched_delta};"
+            f"digest_match={gate['digest_match']}")
+
+    out = os.path.join(os.getcwd(), "BENCH_failover.json")
+    with open(out, "w") as f:
+        json.dump({
+            "bench": "failover",
+            "n_clients": N_CLIENTS,
+            "ops_per_client": OPS_PER_CLIENT,
+            "seed": SEED,
+            "kill_time": kill_time,
+            "baseline": {
+                "ops": base.ops, "makespan_s": base.makespan,
+                "wal_records": base.rpc["vm_wal_records"],
+                "wal_stream_batches": base.rpc["vm_wal_stream_batches"],
+                "trace_digest": base.trace_digest,
+            },
+            "kill": {
+                "ops": kill.ops, "makespan_s": kill.makespan,
+                "failovers": kill.rpc["vm_failovers"],
+                "trace_digest": kill.trace_digest,
+            },
+            "leader_requests": {
+                "baseline": {i: r for i, (_, r) in base_reqs.items()},
+                "kill": {i: r for i, (_, r) in kill_reqs.items()},
+            },
+            "gate": gate,
+        }, f, indent=2)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    run(Reporter())

@@ -13,7 +13,7 @@ import sys
 from benchmarks.common import Reporter
 
 BENCHES = ["append", "read", "meta", "space", "gc", "cache", "ckpt",
-           "kernels", "roofline", "concurrency", "e2e"]
+           "failover", "kernels", "roofline", "concurrency", "e2e"]
 
 
 def main() -> None:
@@ -35,6 +35,8 @@ def main() -> None:
             from benchmarks import bench_cache as m
         elif name == "ckpt":
             from benchmarks import bench_ckpt as m
+        elif name == "failover":
+            from benchmarks import bench_failover as m
         elif name == "kernels":
             from benchmarks import bench_kernels as m
         elif name == "roofline":

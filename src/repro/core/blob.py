@@ -110,6 +110,13 @@ class BlobClient:
         self.name = name
         del io_workers  # no-op, see docstring
         self._lineage_cache: Dict[str, Tuple[Tuple[str, int], ...]] = {}
+        # per-client request sequence: idempotency keys for assign verbs
+        # (a re-driven request after a VM leader failover returns its
+        # already-journaled version instead of double-assigning)
+        self._req_seq = itertools.count(1)
+
+    def _assign_key(self) -> str:
+        return f"{self.name}/{next(self._req_seq)}"
 
     # ------------------------------------------------------------- small utils
     def _await(self, barrier: float) -> None:
@@ -279,7 +286,8 @@ class BlobClient:
 
         # -- phase 2: version assignment (the only global serialization) --
         info = self.vm.assign_version(
-            blob_id, offset, size, client=self.name, pd=pd_wire
+            blob_id, offset, size, client=self.name, pd=pd_wire,
+            key=self._assign_key(),
         )
         vw, off = info.version, info.offset
 
@@ -408,6 +416,7 @@ class BlobClient:
             [(blob_id, None if is_append else off, len(buf), pd_wire[idx])
              for idx, (buf, off) in enumerate(items)],
             client=self.name,
+            keys=[self._assign_key() for _ in items],
         )
 
         if is_append and infos[0].offset % psize != 0:

@@ -67,7 +67,7 @@ from typing import Dict, Iterable, List, Optional, Set, Tuple
 from repro.core import segment_tree as st
 from repro.core.pages import UpdateExtent, iter_created_nodes, node_children
 from repro.core.transport import EndpointDown
-from repro.core.version_manager import owner_fn_for_lineage
+from repro.core.version_manager import VersionUnpublished, owner_fn_for_lineage
 
 
 def mark_live(
@@ -389,8 +389,11 @@ def resweep_after_restore(svc, client: str = "gc-restore") -> Dict[str, int]:
         for v in sorted(retired):
             try:
                 recs.append(vm.update_log(blob_id, v))
-            except Exception:
-                continue  # retire record without an assign record: skip
+            except VersionUnpublished:
+                # retire record without an assign record: skip.  ONLY
+                # this typed answer means "never assigned" — any other
+                # exception here is real corruption and must propagate
+                continue
         if recs:
             pending[blob_id] = recs
     if not pending:

@@ -26,8 +26,11 @@ Writing a new scenario::
 then ``run_scenario("mine", n_clients=256, seed=1)``.  Programs must
 return ``{"ops": int, "bytes": int}``; the runner aggregates those into
 the throughput figures.  Failure injection: pass
-``failures=[(virtual_time, endpoint), ...]`` and the runner spawns a
-chaos task that downs each endpoint at its scheduled virtual instant.
+``failures=[(virtual_time, target), ...]`` and the runner spawns a
+chaos task that downs each target at its scheduled virtual instant.  A
+plain target names a data provider; ``"vm-leader:<idx>"`` downs the
+replicated version-manager leader of the ``idx``-th setup blob's
+lineage (resolved at fire time), exercising the lease-based failover.
 """
 
 from __future__ import annotations
@@ -236,6 +239,43 @@ def _append_burst_program(env: ScenarioEnv, i: int):
             versions.extend(c.append_many(bid, [payload] * BURST))
         return {"ops": len(versions), "bytes": len(versions) * env.chunk,
                 "versions": versions}
+
+    return prog
+
+
+def _setup_vm_failover(env: ScenarioEnv) -> None:
+    """Multi-lineage burst fixture for the HA control plane: each blob
+    roots its own lineage with a replicated leader endpoint
+    (``vm-<blob>``), and clients are *pinned* to one blob each so
+    per-lineage effects (the killed leader's lineage vs the untouched
+    ones) are attributable in the wire stats."""
+    c = env.client("setup")
+    n_blobs = max(2, min(4, env.n_clients // 4 or 2))
+    env.state["blobs"] = [c.create(psize=env.psize) for _ in range(n_blobs)]
+
+
+def _vm_failover_program(env: ScenarioEnv, i: int):
+    """Append bursts pinned per lineage, recording each burst's virtual
+    latency.  With ``failures=[(t, 'vm-leader:0')]`` the leader of the
+    first blob's lineage dies mid-run: its writers wait out the lease,
+    promote a follower and re-drive — the burst still completes and no
+    published version is lost (``bench_failover`` gates this)."""
+
+    def prog() -> dict:
+        blobs = env.state["blobs"]
+        bid = blobs[i % len(blobs)]
+        c = env.client(f"f{i:03d}")
+        clock = env.svc.clock
+        payload = bytes([i % 251 + 1]) * env.chunk
+        versions: List[int] = []
+        lats: List[float] = []
+        for _ in range(env.ops_per_client):
+            t0 = clock.now()
+            versions.extend(c.append_many(bid, [payload] * BURST))
+            lats.append(clock.now() - t0)
+        return {"ops": len(versions), "bytes": len(versions) * env.chunk,
+                "versions": versions, "lineage": i % len(blobs),
+                "burst_latencies": lats}
 
     return prog
 
@@ -608,6 +648,15 @@ SCENARIOS: Dict[str, Scenario] = {
         "(distributed mark/sweep while clients are active)",
         _setup_gc_mixed, _gc_mixed_program,
     ),
+    "vm_failover": Scenario(
+        "vm_failover",
+        "Clients pinned per lineage driving append bursts while a VM "
+        "lineage leader dies mid-run (HA control plane: lease failover, "
+        "journal re-drive, untouched lineages unaffected)",
+        _setup_vm_failover, _vm_failover_program,
+        env_defaults={"page_cache_bytes": 0, "vm_replication": 2,
+                      "vm_lease_ttl": 0.05},
+    ),
     "train_serve": Scenario(
         "train_serve",
         "Integrated train/serve loop: trainers stream corpus shards, the "
@@ -686,12 +735,19 @@ def run_scenario(
 
     for i in range(n_clients):
         sim.spawn(spec.program(env, i), name=f"{scenario}-{i:03d}")
-    for t, endpoint in failures:
-        def chaos(t=t, endpoint=endpoint):
-            sim.sleep_until(t)
-            svc.kill_provider(endpoint)
-            return {"ops": 0, "bytes": 0, "killed": endpoint}
-        sim.spawn(chaos, name=f"chaos-{endpoint}")
+    for t, target in failures:
+        def chaos(target=target):
+            # Targets resolve at fire time: "vm-leader:<idx>" downs the
+            # replicated VM leader of the idx-th setup blob's lineage
+            # (HA failover path); anything else is a data provider.
+            if target.startswith("vm-leader:"):
+                idx = int(target.split(":", 1)[1])
+                killed = svc.kill_vm_leader(env.state["blobs"][idx])
+            else:
+                svc.kill_provider(target)
+                killed = target
+            return {"ops": 0, "bytes": 0, "killed": killed}
+        sim.spawn_at(t, chaos, name=f"chaos-{target}")
 
     t0 = time.perf_counter()
     sim.run(raise_errors=raise_errors)

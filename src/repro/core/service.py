@@ -19,8 +19,12 @@ from repro.core.dedup_index import DedupIndex
 from repro.core.dht import MetadataDHT
 from repro.core.provider import DataProvider, ProviderManager
 from repro.core.sim import Clock
-from repro.core.transport import Wire
-from repro.core.version_manager import VersionManager, VersionUnpublished
+from repro.core.transport import EndpointDown, Wire
+from repro.core.version_manager import (
+    VMGR_ENDPOINT,
+    VersionManager,
+    VersionUnpublished,
+)
 from repro.store.file import FilePageStore
 from repro.store.memory import MemoryPageStore
 
@@ -52,6 +56,9 @@ class BlobSeerService:
         page_cache_bytes: int = DEFAULT_PAGE_CACHE_BYTES,
         read_prefetch_pages: int = 0,
         dedup: bool = False,
+        vm_replication: int = 0,
+        vm_lease_ttl: float = 0.25,
+        wal_fsync: str = "batch",
     ) -> None:
         """``clock``: scheduling backend for every blocking point in the
         deployment (wall-clock threads by default; pass a
@@ -68,7 +75,13 @@ class BlobSeerService:
         handshake.  The content-hash index itself is ALWAYS deployed
         (its counters report zero and its GC verbs self-disable while
         nothing was ever registered), so flipping the flag changes
-        client behavior only — never the deployment topology."""
+        client behavior only — never the deployment topology.
+
+        ``vm_replication``: follower replicas per version-manager
+        lineage shard (0 = the single shared ``vmgr`` endpoint, the
+        pre-HA behavior).  ``vm_lease_ttl``: leader lease duration —
+        failover waits it out before promoting.  ``wal_fsync``: the
+        manager WAL's fsync policy (``never``/``batch``/``always``)."""
         if wire is not None:
             self.wire = wire
         elif clock is not None:
@@ -76,7 +89,10 @@ class BlobSeerService:
         else:
             self.wire = Wire()
         self.clock = self.wire.clock
-        self.vm = VersionManager(wire=self.wire, wal_path=wal_path)
+        self.vm = VersionManager(wire=self.wire, wal_path=wal_path,
+                                 replication=vm_replication,
+                                 lease_ttl=vm_lease_ttl,
+                                 fsync_policy=wal_fsync)
         self.dht = MetadataDHT(self.wire, n_meta_shards, replication=meta_replication)
         self.page_cache = PageCache(page_cache_bytes, clock=self.clock)
         self.dedup_index = DedupIndex(self.wire)
@@ -98,6 +114,8 @@ class BlobSeerService:
         self._verify = verify_digests
         self._monitor: Optional[threading.Thread] = None
         self._monitor_stop = threading.Event()
+        self._monitor_errors = 0   # retryable recovery failures (see rpc_report)
+        self._monitor_fatal: Optional[BaseException] = None
         for i in range(n_providers):
             self.add_provider(f"prov-{i:04d}")
 
@@ -158,9 +176,39 @@ class BlobSeerService:
         (replica racing/balancing then naturally deprioritizes it)."""
         self.wire.set_straggler(pid, factor)
 
+    def vm_leader_endpoint(self, blob_id: str) -> str:
+        """The version-manager endpoint currently serving this blob's
+        lineage (``vmgr`` with replication off)."""
+        return self.vm.leader_endpoint(blob_id)
+
+    def kill_vm_leader(self, blob_id: str) -> str:
+        """Down the CURRENT leader endpoint of the blob's lineage shard
+        (failure injection for the HA control plane).  The next verb on
+        the lineage waits out the lease and promotes a follower; other
+        lineages are untouched.  Returns the endpoint killed."""
+        ep = self.vm.leader_endpoint(blob_id)
+        if ep == VMGR_ENDPOINT:
+            raise RuntimeError(
+                "vm_replication=0: no per-lineage leader to kill "
+                "(build the service with vm_replication >= 1)")
+        self.wire.set_down(ep, True)
+        return ep
+
     # ---------------------------------------------------- background maintenance
+    #: errors the recovery loop may safely retry on the next sweep: a
+    #: downed endpoint, a blocking-verb timeout, or a version whose
+    #: assignment raced retirement/recovery.  Anything else is a bug —
+    #: retrying it forever would only hide it.
+    MONITOR_RETRYABLE = (EndpointDown, TimeoutError, VersionUnpublished)
+
     def start_monitor(self, interval: float = 0.5, stall_timeout: float = 5.0) -> None:
-        """Heartbeat sweep + stalled-writer recovery loop (beyond paper)."""
+        """Heartbeat sweep + stalled-writer recovery loop (beyond paper).
+
+        Retryable failures (:attr:`MONITOR_RETRYABLE`) are counted in
+        ``monitor_errors`` (see ``rpc_report``) and retried next sweep.
+        An unexpected exception also counts, then stops the loop and is
+        re-raised by the next :meth:`stop_monitor` — a permanently
+        failing rebuild can no longer retry silently forever."""
         if self.clock.is_virtual:
             raise RuntimeError(
                 "start_monitor spawns a real thread; under a virtual clock "
@@ -175,20 +223,30 @@ class BlobSeerService:
                 for blob_id, rec in self.vm.find_stalled(stall_timeout):
                     try:
                         agent.rebuild_metadata(blob_id, rec.version)
-                    except Exception:
-                        pass  # retried next sweep
+                    except self.MONITOR_RETRYABLE:
+                        self._monitor_errors += 1
+                    except Exception as exc:
+                        self._monitor_errors += 1
+                        self._monitor_fatal = exc
+                        return
 
         self._monitor = threading.Thread(target=loop, daemon=True)
         self._monitor.start()
 
     def stop_monitor(self) -> None:
         """Stop the background maintenance thread started by
-        :meth:`start_monitor` (joins it; safe to call when stopped)."""
+        :meth:`start_monitor` (joins it; safe to call when stopped).
+        Re-raises the unexpected exception that killed the loop, if
+        any — the deferred surfacing point for monitor bugs."""
         self._monitor_stop.set()
         if self._monitor is not None:
             self._monitor.join(timeout=2.0)
             self._monitor = None
         self._monitor_stop.clear()
+        if self._monitor_fatal is not None:
+            exc = self._monitor_fatal
+            self._monitor_fatal = None
+            raise exc
 
     def recover_stalled(self, stall_timeout: float = 0.0) -> int:
         """One-shot recovery sweep; returns number of updates recovered."""
@@ -226,7 +284,16 @@ class BlobSeerService:
             n_providers=n_providers, n_meta_shards=n_meta_shards,
             spool_dir=spool_dir, **kwargs,
         )
-        svc.vm = VersionManager.recover_from_wal(wal_path, wire=svc.wire)
+        # recover with the same HA/durability config __init__ resolved
+        # (vm_replication / vm_lease_ttl / wal_fsync kwargs): the
+        # recovered manager rebuilds each lineage's replica group and
+        # bulk-streams the journal to the fresh followers
+        svc.vm = VersionManager.recover_from_wal(
+            wal_path, wire=svc.wire,
+            replication=svc.vm._replication,
+            lease_ttl=svc.vm._lease_ttl,
+            fsync_policy=svc.vm._fsync_policy,
+        )
         # the recovered manager replaces the one __init__ subscribed to;
         # re-attach the cache-eviction hook so post-restore GC rounds
         # keep the page cache coherent
@@ -343,6 +410,8 @@ class BlobSeerService:
              lambda: self.page_cache.reset_counters()),
             ("dedup_", lambda: self.dedup_index.rpc_counters(),
              lambda: self.dedup_index.reset_rpc_counters()),
+            ("monitor_", lambda: {"errors": self._monitor_errors},
+             lambda: setattr(self, "_monitor_errors", 0)),
         ]
 
     def reset_rpc_counters(self) -> None:

@@ -173,6 +173,17 @@ class Simulator(Clock):
         self._schedule(task, self._now, "spawn")
         return task
 
+    def spawn_at(self, t: float, fn: Callable[[], object],
+                 name: Optional[str] = None) -> _Task:
+        """Register a task that starts at virtual instant ``t`` — the
+        failure-injection primitive (kill endpoint X at t=0.8).  Same
+        as a spawned task whose first statement sleeps to ``t``, minus
+        the extra wake event in the trace."""
+        task = _Task(name if name is not None else f"task-{len(self._tasks)}", fn)
+        self._tasks.append(task)
+        self._schedule(task, max(t, self._now), "spawn")
+        return task
+
     def run(self, raise_errors: bool = True) -> None:
         """Dispatch events until the heap drains; detects deadlock."""
         if self._current is not None:

@@ -57,6 +57,17 @@ VM_CTRL_MSG_BYTES = 96      # one singleton control-plane verb
 VM_ASSIGN_REQ_BYTES = 128   # one request inside assign_versions_many
 VM_COMPLETE_CMD_BYTES = 48  # one command inside metadata_complete_many
 
+# Wire-cost model of the HA control plane (replicated lineage shards).
+# Every journal record a shard leader commits is streamed to its F
+# followers: all of one verb's records ride ONE fire-and-forget
+# `transfer_batch` per follower, per record below.  Publication acks
+# barrier on the stream's completion instant (per-endpoint FIFO makes
+# that cover every earlier record too), so replication adds bandwidth
+# but no blocking round trip to the assign path.  Failover pays one
+# blocking promotion handshake to the follower being promoted.
+VM_WAL_REC_BYTES = 112     # one replicated journal record in a stream batch
+VM_WAL_PROMOTE_BYTES = 64  # the lease-takeover promotion handshake RPC
+
 # Wire-cost model of the dedup index (``core/dedup_index.py``).  The
 # lookup is the one blocking control round trip the handshake adds per
 # write burst: all of a burst's digests ride ONE `transfer_batch`, per

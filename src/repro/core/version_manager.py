@@ -51,16 +51,28 @@ Beyond-paper (the paper defers failure handling):
   rebuilds the same shard layout; records of different lineages commute
   (the journal only promises order *within* a lineage, which is exactly
   what each shard's lock serializes).
+
+HA control plane (``replication > 0``; see ARCHITECTURE.md):
+
+* each lineage shard becomes a **replicated state machine**: its journal
+  records stream to F follower endpoints over the wire (batched,
+  fire-and-forget), a clock-based lease marks the leader, and when the
+  leader endpoint dies mid-burst the next verb waits out the lease and
+  promotes the most-caught-up follower — replaying its copy of the
+  journal with exactly the rules :meth:`VersionManager.recover_from_wal`
+  applies to the on-disk WAL.  Publication acks barrier on the stream's
+  completion instant, so an acked publication is never lost to failover.
 """
 
 from __future__ import annotations
 
 import itertools
 import json
+import os
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Set, Tuple
+from typing import Callable, Dict, FrozenSet, Iterable, List, Optional, Sequence, Set, Tuple
 
 from repro.core.pages import pages_spanned, root_pages_for
 from repro.core.sim import Clock, WallClock
@@ -68,6 +80,9 @@ from repro.core.transport import (
     VM_ASSIGN_REQ_BYTES,
     VM_COMPLETE_CMD_BYTES,
     VM_CTRL_MSG_BYTES,
+    VM_WAL_PROMOTE_BYTES,
+    VM_WAL_REC_BYTES,
+    EndpointDown,
     Wire,
 )
 
@@ -166,6 +181,57 @@ class BlobRecord:
     lineage_id: str = ""                      # shard key (root blob of the family)
 
 
+class _FollowerReplica:
+    """One follower's copy of a lineage's replicated journal.
+
+    ``records`` is exactly the prefix of the leader's journal that was
+    successfully streamed to this endpoint.  A single failed stream
+    marks the follower ``lost`` forever: its journal now has a gap, so
+    it can never be promoted (a promoted gap would silently unassign
+    versions the leader already acked)."""
+
+    __slots__ = ("endpoint", "records", "lost")
+
+    def __init__(self, endpoint: str) -> None:
+        self.endpoint = endpoint
+        self.records: List[dict] = []
+        self.lost = False
+
+
+class _ShardReplication:
+    """Replication state of one lineage shard (the HA control plane).
+
+    The leader is an endpoint name, not a process: every verb on the
+    lineage charges the leader endpoint, which both accounts the RPC
+    and *detects death* (``EndpointDown``).  ``lease_expires_at`` is
+    renewed on every successfully charged verb; failover must wait it
+    out before promoting, because the old leader may still be acking
+    verbs issued before the fault was observed (the same clock-based
+    expiry rule as GC pin leases).  Mutated only under the shard lock,
+    except the benign lease-renewal stamp."""
+
+    __slots__ = ("leader_ep", "followers", "lease_ttl", "lease_expires_at",
+                 "epoch", "pending", "failing_over", "barrier_at",
+                 "assigned_keys")
+
+    def __init__(self, lineage_id: str, n_followers: int, lease_ttl: float,
+                 now: float) -> None:
+        self.leader_ep = f"vm-{lineage_id}"
+        self.followers: Tuple[_FollowerReplica, ...] = tuple(
+            _FollowerReplica(f"vm-{lineage_id}-f{k}")
+            for k in range(1, n_followers + 1)
+        )
+        self.lease_ttl = lease_ttl
+        self.lease_expires_at = now + lease_ttl
+        self.epoch = 1                    # bumped at every failover
+        self.pending: List[dict] = []     # records journaled by the verb in flight
+        self.failing_over = False         # guards concurrent failover attempts
+        self.barrier_at = 0.0             # completion instant of the newest stream
+        # idempotency: journaled assign key -> (blob, version); a re-driven
+        # assign with a known key returns the already-assigned version
+        self.assigned_keys: Dict[str, Tuple[str, int]] = {}
+
+
 class LineageShard:
     """One partition of the version manager's state: a CREATE-rooted
     blob plus every branch forked (transitively) from it.
@@ -183,7 +249,8 @@ class LineageShard:
 plan_retirement` run under a single shard lock.
     """
 
-    __slots__ = ("lineage_id", "lock", "cond", "blobs", "active_reads")
+    __slots__ = ("lineage_id", "lock", "cond", "blobs", "active_reads",
+                 "repl")
 
     def __init__(self, lineage_id: str, clock: Clock) -> None:
         self.lineage_id = lineage_id
@@ -196,6 +263,9 @@ plan_retirement` run under a single shard lock.
         # in-flight read counts per (owner blob, version), for the GC
         # sweep's drain barrier
         self.active_reads: Dict[Tuple[str, int], int] = {}
+        # HA replication group (None with replication off: every verb
+        # then charges the shared VMGR_ENDPOINT exactly as before)
+        self.repl: Optional[_ShardReplication] = None
 
 
 class VersionManager:
@@ -214,12 +284,29 @@ class VersionManager:
     sweep finalization — lives here so that a single critical section
     per lineage decides what GC may reclaim (see ``core/gc.py``)."""
 
+    #: batch fsync policy: coalesce at most this many journal records
+    #: between fsyncs (publication acks always sync, see _repl_barrier)
+    FSYNC_COALESCE = 256
+
     def __init__(self, wire: Optional[Wire] = None, wal_path: Optional[str] = None,
-                 clock: Optional[Clock] = None) -> None:
+                 clock: Optional[Clock] = None, *, replication: int = 0,
+                 lease_ttl: float = 0.25,
+                 fsync_policy: str = "batch") -> None:
+        if fsync_policy not in ("never", "batch", "always"):
+            raise ValueError(f"fsync_policy must be never/batch/always, "
+                             f"got {fsync_policy!r}")
+        if replication < 0:
+            raise ValueError("replication must be >= 0")
         self.wire = wire
         if clock is None:
             clock = wire.clock if wire is not None else WallClock()
         self._clock = clock
+        # HA config: replication = follower count per lineage shard
+        # (0 = single shared endpoint, the pre-HA behavior).
+        self._replication = replication
+        self._lease_ttl = lease_ttl
+        self._fsync_policy = fsync_policy
+        self._wal_dirty = 0   # records written since the last fsync
         # Lineage registry: blob id -> lineage id -> shard.  The
         # registry lock guards only these maps and the id counter; it
         # is never held across a shard operation (lock order:
@@ -255,28 +342,74 @@ class VersionManager:
             "batched_ops": 0,
             "assign_batches": 0,
             "complete_batches": 0,
+            "wal_records": 0,        # journal records streamed to followers
+            "wal_stream_batches": 0,  # fire-and-forget stream batches sent
+            "wal_fsyncs": 0,
+            "failovers": 0,
         }
 
     # ------------------------------------------------------------------ utils
-    def _charge(self, client: Optional[str]) -> None:
-        """Account one singleton control-plane verb."""
+    def _charge(self, client: Optional[str], sh: Optional[LineageShard] = None) -> None:
+        """Account one singleton control-plane verb (routed to the
+        lineage's leader endpoint when the shard is replicated)."""
         with self._ctr_lock:
             self._counters["ops"] += 1
             self._counters["round_trips"] += 1
-        if self.wire is not None:
-            self.wire.transfer(VMGR_ENDPOINT, _CTRL_MSG_BYTES, inbound=True, peer=client)
+        self._charge_wire(sh, lambda ep: self.wire.transfer(
+            ep, _CTRL_MSG_BYTES, inbound=True, peer=client))
 
     def _charge_batch(self, n_items: int, item_bytes: int, kind: str,
-                      client: Optional[str]) -> None:
-        """Account one batched control RPC carrying ``n_items`` verbs."""
+                      client: Optional[str],
+                      shards: Optional[Sequence[LineageShard]] = None) -> None:
+        """Account one batched control RPC carrying ``n_items`` verbs.
+
+        With replication on, ``shards`` (aligned with the items) routes
+        each item to its lineage's leader: the batch becomes one RPC
+        *per touched leader* — cross-lineage batches split, same-lineage
+        bursts still amortize exactly as before."""
+        repl_groups: Optional[Dict[str, Tuple[LineageShard, int]]] = None
+        if shards is not None and any(s.repl is not None for s in shards):
+            repl_groups = {}
+            for s in shards:
+                lid = s.lineage_id
+                repl_groups[lid] = (s, repl_groups.get(lid, (s, 0))[1] + 1)
+        n_rpcs = 1 if repl_groups is None else len(repl_groups)
         with self._ctr_lock:
             self._counters["ops"] += n_items
             self._counters["batched_ops"] += n_items
-            self._counters["round_trips"] += 1
-            self._counters[f"{kind}_batches"] += 1
-        if self.wire is not None:
-            self.wire.transfer_batch(VMGR_ENDPOINT, [item_bytes] * n_items,
-                                     inbound=True, peer=client)
+            self._counters["round_trips"] += n_rpcs
+            self._counters[f"{kind}_batches"] += n_rpcs
+        if repl_groups is None:
+            if self.wire is not None:
+                self.wire.transfer_batch(VMGR_ENDPOINT, [item_bytes] * n_items,
+                                         inbound=True, peer=client)
+            return
+        for lid in sorted(repl_groups):
+            s, cnt = repl_groups[lid]
+            self._charge_wire(s, lambda ep, cnt=cnt: self.wire.transfer_batch(
+                ep, [item_bytes] * cnt, inbound=True, peer=client))
+
+    def _charge_wire(self, sh: Optional[LineageShard],
+                     send: Callable[[str], float]) -> None:
+        """Issue one control RPC, retrying through failover: a dead
+        leader endpoint triggers promotion of a follower, after which
+        the verb is re-charged against the new leader.  Must be called
+        with NO shard lock held (failover sleeps out the old lease)."""
+        if self.wire is None:
+            return
+        repl = sh.repl if sh is not None else None
+        if repl is None:
+            send(VMGR_ENDPOINT)
+            return
+        while True:
+            try:
+                send(repl.leader_ep)
+            except EndpointDown:
+                self._failover(sh)
+                continue
+            # the leader answered: it provably held the lease just now
+            repl.lease_expires_at = self._clock.now() + repl.lease_ttl
+            return
 
     def rpc_counters(self) -> Dict[str, int]:
         """Control-plane accounting: ``ops`` (logical verbs),
@@ -293,21 +426,172 @@ class VersionManager:
             for k in self._counters:
                 self._counters[k] = 0
 
-    def _journal(self, lineage_id: str, rec: dict) -> None:
+    def _journal(self, sh: LineageShard, rec: dict) -> None:
         """Append one WAL record (stamped with its lineage id).
 
         Called while holding the lineage's shard lock, so the journal
         order of any single lineage matches its state-mutation order;
         records of different lineages may interleave freely — they
         reference disjoint state, so replay commutes across lineages.
+
+        With replication on the record is also buffered on the shard;
+        the verb streams its whole buffer to the followers in one batch
+        per follower via :meth:`_repl_flush` before releasing the lock.
         """
         rec = dict(rec)
-        rec["lineage"] = lineage_id
+        rec["lineage"] = sh.lineage_id
         with self._wal_lock:
             self._wal.append(rec)
             if self._wal_file is not None:
                 self._wal_file.write(json.dumps(rec) + "\n")
                 self._wal_file.flush()
+                if self._fsync_policy == "always":
+                    os.fsync(self._wal_file.fileno())
+                    with self._ctr_lock:
+                        self._counters["wal_fsyncs"] += 1
+                elif self._fsync_policy == "batch":
+                    self._wal_dirty += 1
+        if sh.repl is not None:
+            sh.repl.pending.append(rec)
+        if self._fsync_policy == "batch" and self._wal_dirty >= self.FSYNC_COALESCE:
+            self._wal_sync()
+
+    def _wal_sync(self) -> None:
+        """Force journaled records to stable storage (fsync).  Called at
+        publication-ack points and when the batch-coalescing threshold
+        fills; a no-op with ``fsync_policy='never'`` or a clean file."""
+        if self._fsync_policy == "never":
+            return
+        with self._wal_lock:
+            if self._wal_file is None or self._wal_dirty == 0:
+                return
+            self._wal_file.flush()
+            os.fsync(self._wal_file.fileno())
+            self._wal_dirty = 0
+        with self._ctr_lock:
+            self._counters["wal_fsyncs"] += 1
+
+    # ------------------------------------------------------- HA replication
+    def _repl_flush(self, sh: LineageShard) -> None:
+        """Stream the records the current verb journaled to every live
+        follower: ONE fire-and-forget batch per follower (latency paid
+        once, ``VM_WAL_REC_BYTES`` per record).  Caller holds the shard
+        lock, so follower journals extend in exactly leader-journal
+        order.  A follower whose endpoint is down misses the batch and
+        is dropped from the group for good (its journal has a gap)."""
+        repl = sh.repl
+        if repl is None or not repl.pending:
+            return
+        recs, repl.pending = repl.pending, []
+        live = 0
+        for f in repl.followers:
+            if f.lost:
+                continue
+            if self.wire is not None:
+                try:
+                    done = self.wire.transfer_batch(
+                        f.endpoint, [VM_WAL_REC_BYTES] * len(recs),
+                        inbound=True, peer=repl.leader_ep,
+                        fire_and_forget=True)
+                except EndpointDown:
+                    f.lost = True
+                    continue
+                if done > repl.barrier_at:
+                    repl.barrier_at = done
+            f.records.extend(recs)
+            live += 1
+        if live:
+            with self._ctr_lock:
+                self._counters["wal_records"] += len(recs) * live
+                self._counters["wal_stream_batches"] += live
+
+    def _repl_barrier(self, sh: LineageShard) -> None:
+        """Durability barrier before a publication-affecting ack: fsync
+        the local WAL and (under a virtual clock) wait until the newest
+        follower stream has arrived.  Endpoint FIFO makes the newest
+        stream's completion instant cover every earlier record too, so
+        one wait suffices.  Must be called with NO shard lock held —
+        under the simulator this sleeps in virtual time."""
+        self._wal_sync()
+        repl = sh.repl
+        if repl is None or self.wire is None:
+            return
+        t = repl.barrier_at
+        if self._clock.is_virtual and t > self._clock.now():
+            self._clock.sleep_until(t)
+
+    def _failover(self, sh: LineageShard) -> None:
+        """Promote the most-caught-up live follower of a dead leader.
+
+        Called from :meth:`_charge_wire` (no shard lock held) when the
+        leader endpoint answered :class:`EndpointDown`.  Exactly one
+        task runs the promotion; concurrent verbs wait on the shard
+        condition and retry against the new leader.  The promotion:
+
+        1. waits out the dead leader's lease (it may still be acking
+           verbs issued before the fault was observed);
+        2. picks the live follower with the longest journal (ties break
+           by endpoint name — deterministic under the simulator);
+        3. pays one blocking promotion handshake RPC;
+        4. replays the follower's journal with the same rules as
+           :meth:`recover_from_wal` — plus the soft state a same-epoch
+           failover can keep that a cold restart drops: pin leases and
+           assign idempotency keys are rebuilt from their records, and
+           read leases carry over (re-registration with the new leader);
+        5. swaps the shard's blob records, bumps the epoch, renews the
+           lease and journals a ``failover`` audit record (ignored by
+           WAL replay).
+
+        Raises :class:`EndpointDown` when no live follower remains.
+        """
+        repl = sh.repl
+        with sh.cond:
+            if repl.failing_over:
+                epoch0 = repl.epoch
+                while repl.failing_over and repl.epoch == epoch0:
+                    sh.cond.wait(repl.lease_ttl)
+                return
+            if not self.wire.is_down(repl.leader_ep):
+                return   # a concurrent failover already installed a new leader
+            repl.failing_over = True
+            lease_until = repl.lease_expires_at
+            candidates = [f for f in repl.followers
+                          if not f.lost and not self.wire.is_down(f.endpoint)]
+        try:
+            if lease_until > self._clock.now():
+                self._clock.sleep_until(lease_until)
+            if not candidates:
+                raise EndpointDown(
+                    f"{repl.leader_ep}: no live follower to promote")
+            promoted = max(candidates,
+                           key=lambda f: (len(f.records), f.endpoint))
+            self.wire.transfer(promoted.endpoint, VM_WAL_PROMOTE_BYTES,
+                               inbound=True)
+            blobs, pins, keys = self.replay_lineage(promoted.records)
+            with sh.cond:
+                old_blobs = set(sh.blobs)
+                sh.blobs = blobs
+                repl.followers = tuple(f for f in repl.followers
+                                       if f is not promoted)
+                repl.leader_ep = promoted.endpoint
+                repl.epoch += 1
+                repl.assigned_keys = keys
+                repl.lease_expires_at = self._clock.now() + repl.lease_ttl
+                with self._pins_lock:
+                    for lid in [lid for lid, p in self._pins.items()
+                                if p.blob_id in old_blobs]:
+                        del self._pins[lid]
+                    self._pins.update(pins)
+                self._journal(sh, {"op": "failover", "epoch": repl.epoch,
+                                   "leader": promoted.endpoint})
+                self._repl_flush(sh)
+                sh.cond.notify_all()
+            with self._ctr_lock:
+                self._counters["failovers"] += 1
+        finally:
+            with sh.cond:
+                repl.failing_over = False
+                sh.cond.notify_all()
 
     def _shard_of(self, blob_id: str) -> LineageShard:
         with self._registry_lock:
@@ -410,28 +694,35 @@ class VersionManager:
         """CREATE: new empty blob, snapshot 0 (size 0).  Roots a fresh
         lineage shard — updates to it will never contend with any
         existing blob's version-manager critical section."""
-        self._charge(client)
+        self._charge(client)   # CREATE is a registry verb: always "vmgr"
         with self._registry_lock:
             blob_id = f"blob-{next(self._ids):08d}"
             sh = LineageShard(blob_id, self._clock)
             sh.blobs[blob_id] = BlobRecord(blob_id=blob_id, psize=psize,
                                            lineage_id=blob_id)
+            if self._replication > 0:
+                sh.repl = _ShardReplication(blob_id, self._replication,
+                                            self._lease_ttl, self._clock.now())
             self._shards[blob_id] = sh
             self._lineage_of[blob_id] = blob_id
             self._blob_order.append(blob_id)
             # journal BEFORE the registry lock drops: the instant the
             # blob is visible, another thread may journal an op on it,
             # and recovery requires the 'create' record to come first
-            self._journal(blob_id, {"op": "create", "blob": blob_id,
-                                    "psize": psize})
+            self._journal(sh, {"op": "create", "blob": blob_id,
+                               "psize": psize})
+        with sh.lock:
+            # the create record opens the lineage's replicated journal,
+            # so each follower's copy is self-contained from record one
+            self._repl_flush(sh)
         return blob_id
 
     def branch(self, blob_id: str, version: int, client: Optional[str] = None) -> str:
         """BRANCH: fork ``blob_id`` at published snapshot ``version``.
         The fork joins its ancestor's lineage shard (inherited versions,
         branch-root retention and border anchors stay intra-shard)."""
-        self._charge(client)
         sh = self._shard_of(blob_id)
+        self._charge(client, sh)
         with sh.lock:
             src = self._blob_in(sh, blob_id)
             if version > src.published:
@@ -451,9 +742,9 @@ class VersionManager:
                 published=version,
                 lineage_id=sh.lineage_id,
             )
-            self._journal(sh.lineage_id,
-                          {"op": "branch", "blob": bid, "src": blob_id,
-                           "at": version})
+            self._journal(sh, {"op": "branch", "blob": bid, "src": blob_id,
+                               "at": version})
+            self._repl_flush(sh)
             return bid
 
     def get_recent(self, blob_id: str, client: Optional[str] = None) -> int:
@@ -464,15 +755,15 @@ class VersionManager:
         the newest published version, so this only walks under an
         explicit-keep GC).
         """
-        self._charge(client)
         sh = self._shard_of(blob_id)
+        self._charge(client, sh)
         with sh.lock:
             return self._latest_live_published(sh, self._blob_in(sh, blob_id))
 
     def get_size(self, blob_id: str, version: int, client: Optional[str] = None) -> int:
         """GET_SIZE of a *published* snapshot (paper: fails otherwise)."""
-        self._charge(client)
         sh = self._shard_of(blob_id)
+        self._charge(client, sh)
         with sh.lock:
             if version > self._blob_in(sh, blob_id).published:
                 raise VersionUnpublished(f"{blob_id} v{version} not published")
@@ -491,8 +782,8 @@ class VersionManager:
         """SYNC: block until ``version`` is published (waits on the
         blob's lineage shard — publication on other lineages neither
         wakes nor delays this)."""
-        self._charge(client)
         sh = self._shard_of(blob_id)
+        self._charge(client, sh)
         deadline = None if timeout is None else self._clock.now() + timeout
         with sh.cond:
             while self._blob_in(sh, blob_id).published < version:
@@ -511,6 +802,28 @@ class VersionManager:
             return version <= self._blob_in(sh, blob_id).published
 
     # ----------------------------------------------------- update registration
+    def _reassign_info_locked(self, sh: LineageShard, blob_id: str,
+                              version: int) -> "AssignInfo":
+        """Reconstruct the AssignInfo of an already-assigned version for
+        an idempotent re-drive (same journaled key seen again, e.g. a
+        batch retried across a failover).  Caller holds the shard lock."""
+        b = self._blob_in(sh, blob_id)
+        rec = b.updates[version]
+        vp = rec.vp if rec.vp is not None else 0
+        recent: List[Tuple[int, int, int]] = []
+        for u in range(vp + 1, version):
+            r = b.updates.get(u)
+            if r is not None and u not in b.retired:
+                recent.append((r.version, r.p0, r.p1))
+        return AssignInfo(
+            version=version, offset=rec.offset,
+            prev_size=self._size_of(sh, blob_id, version - 1) if version > 1 else 0,
+            new_size=rec.new_blob_size, root_pages=rec.root_pages,
+            p0=rec.p0, p1=rec.p1, vp=rec.vp,
+            vp_root_pages=self._root_pages_of(sh, blob_id, vp) if vp > 0 else 0,
+            recent_updates=tuple(recent),
+        )
+
     def _assign_locked(
         self,
         sh: LineageShard,
@@ -519,9 +832,17 @@ class VersionManager:
         size: int,
         client: str,
         pd: Tuple,
+        key: Optional[str] = None,
     ) -> "AssignInfo":
         """Register one update; caller holds the shard lock and has
         already charged the wire."""
+        if key is not None and sh.repl is not None:
+            hit = sh.repl.assigned_keys.get(key)
+            if hit is not None:
+                # idempotent re-drive: this key's assignment is already
+                # in the replicated journal — hand back the same version
+                # instead of double-assigning
+                return self._reassign_info_locked(sh, hit[0], hit[1])
         b = self._blob_in(sh, blob_id)
         prev_size = self._size_of(sh, blob_id, b.last_assigned)
         if offset is None:
@@ -561,12 +882,14 @@ class VersionManager:
                 recent.append((r.version, r.p0, r.p1))
         vp_out: Optional[int] = vp if vp > 0 else None
         vp_root = self._root_pages_of(sh, blob_id, vp) if vp > 0 else 0
-        self._journal(sh.lineage_id, {
+        self._journal(sh, {
             "op": "assign", "blob": blob_id, "v": vw, "offset": offset,
             "size": size, "new_size": new_size, "append": is_append,
             "client": client, "pd": [list(x) for x in pd],
-            "vp": rec.vp,
+            "vp": rec.vp, "key": key,
         })
+        if key is not None and sh.repl is not None:
+            sh.repl.assigned_keys[key] = (blob_id, vw)
         return AssignInfo(
             version=vw, offset=offset, prev_size=prev_size,
             new_size=new_size, root_pages=root_pages, p0=p0, p1=p1,
@@ -580,6 +903,7 @@ class VersionManager:
         size: int,
         client: str,
         pd: Tuple = (),
+        key: Optional[str] = None,
     ) -> "AssignInfo":
         """Register an update; returns everything the writer needs (§4.2).
 
@@ -590,17 +914,23 @@ class VersionManager:
         ``vp_root_pages``, ``recent_updates``, the update's page
         extent), which is what lets the client *prefetch* its whole
         border set in level-batched waves before BUILD_META starts.
+
+        ``key`` is an optional client-chosen idempotency token (see
+        :meth:`assign_versions_many`).
         """
-        self._charge(client)
         sh = self._shard_of(blob_id)
+        self._charge(client, sh)
         with sh.lock:
-            return self._assign_locked(sh, blob_id, offset, size, client,
-                                       tuple(pd))
+            info = self._assign_locked(sh, blob_id, offset, size, client,
+                                       tuple(pd), key)
+            self._repl_flush(sh)
+            return info
 
     def assign_versions_many(
         self,
         requests: Sequence[Tuple[str, Optional[int], int, Tuple]],
         client: str,
+        keys: Optional[Sequence[Optional[str]]] = None,
     ) -> List["AssignInfo"]:
         """Batched :meth:`assign_version`: ONE control round trip for
         many updates.
@@ -625,24 +955,38 @@ class VersionManager:
         (:class:`WriteBeyondEnd`, non-positive size, unknown blob)
         raises with NO version assigned — a failed batch never leaves
         half-assigned updates stalling a publication pipeline.
+
+        ``keys`` (optional, aligned with ``requests``) are client-chosen
+        idempotency tokens, journaled on the assign records.  With a
+        replicated shard, re-driving a request whose key is already in
+        the journal — a batch retried across a leader failover — returns
+        the previously assigned version instead of assigning a new one,
+        which is what makes writer retry loops double-assign-safe.
         """
         requests = [(blob_id, offset, size, tuple(pd))
                     for blob_id, offset, size, pd in requests]
         if not requests:
             return []
-        self._charge_batch(len(requests), VM_ASSIGN_REQ_BYTES, "assign", client)
+        if keys is None:
+            keys = [None] * len(requests)
         shard_of: List[LineageShard] = [self._shard_of(blob_id)
                                         for blob_id, *_ in requests]
+        self._charge_batch(len(requests), VM_ASSIGN_REQ_BYTES, "assign",
+                           client, shards=shard_of)
         ordered = sorted({sh.lineage_id: sh for sh in shard_of}.values(),
                          key=lambda sh: sh.lineage_id)
         for sh in ordered:                 # sorted order: deadlock-free
             sh.lock.acquire()
         try:
             # phase 1: validate the whole batch against its running
-            # per-blob state (sizes only grow within the batch)
+            # per-blob state (sizes only grow within the batch);
+            # re-driven requests (key already assigned) don't re-apply
             running: Dict[str, int] = {}   # blob -> projected size
             for i, (blob_id, offset, size, _pd) in enumerate(requests):
                 sh = shard_of[i]
+                if (keys[i] is not None and sh.repl is not None
+                        and keys[i] in sh.repl.assigned_keys):
+                    continue
                 b = self._blob_in(sh, blob_id)
                 prev = running.get(blob_id)
                 if prev is None:
@@ -657,11 +1001,14 @@ class VersionManager:
                 off = prev if offset is None else offset
                 running[blob_id] = max(prev, off + size)
             # phase 2: apply in request order (locks held throughout)
-            return [
+            out = [
                 self._assign_locked(shard_of[i], blob_id, offset, size,
-                                    client, pd)
+                                    client, pd, keys[i])
                 for i, (blob_id, offset, size, pd) in enumerate(requests)
             ]
+            for sh in ordered:
+                self._repl_flush(sh)
+            return out
         finally:
             for sh in reversed(ordered):
                 sh.lock.release()
@@ -674,15 +1021,16 @@ class VersionManager:
         unaligned WRITEs (whose boundary pages are stored after
         assignment).  Keeps WAL-based recovery deterministic.
         """
-        self._charge(client)
         sh = self._shard_of(blob_id)
+        self._charge(client, sh)
         with sh.lock:
             rec = self._blob_in(sh, blob_id).updates[version]
             rec.pd = tuple(pd)
-            self._journal(sh.lineage_id, {
+            self._journal(sh, {
                 "op": "pd", "blob": blob_id, "v": version,
                 "pd": [list(x) for x in pd],
             })
+            self._repl_flush(sh)
 
     def _complete_locked(self, sh: LineageShard, blob_id: str,
                          version: int) -> None:
@@ -691,8 +1039,7 @@ class VersionManager:
         b = self._blob_in(sh, blob_id)
         rec = b.updates[version]
         rec.complete = True
-        self._journal(sh.lineage_id,
-                      {"op": "complete", "blob": blob_id, "v": version})
+        self._journal(sh, {"op": "complete", "blob": blob_id, "v": version})
         # In-order publication *per blob*: snapshot v is revealed only
         # once every snapshot < v of the same blob is published, so
         # readers can always resolve the full weaved tree of anything
@@ -703,17 +1050,22 @@ class VersionManager:
             if nxt is None or not nxt.complete:
                 break
             b.published += 1
-            self._journal(sh.lineage_id,
-                          {"op": "publish", "blob": blob_id, "v": b.published})
+            self._journal(sh, {"op": "publish", "blob": blob_id, "v": b.published})
 
     def metadata_complete(self, blob_id: str, version: int,
                           client: Optional[str] = None) -> None:
-        """Writer finished BUILD_META; publish in order (atomicity)."""
-        self._charge(client)
+        """Writer finished BUILD_META; publish in order (atomicity).
+
+        With a replicated shard the ack barriers on the follower
+        streams (and the local fsync): a publication acked to a writer
+        is durable on every live replica, so no failover can lose it."""
         sh = self._shard_of(blob_id)
+        self._charge(client, sh)
         with sh.cond:
             self._complete_locked(sh, blob_id, version)
+            self._repl_flush(sh)
             sh.cond.notify_all()
+        self._repl_barrier(sh)
 
     def metadata_complete_many(
         self,
@@ -733,11 +1085,12 @@ class VersionManager:
         items = list(items)
         if not items:
             return
-        self._charge_batch(len(items), VM_COMPLETE_CMD_BYTES, "complete", client)
+        item_shards = [self._shard_of(blob_id) for blob_id, _ in items]
+        self._charge_batch(len(items), VM_COMPLETE_CMD_BYTES, "complete",
+                           client, shards=item_shards)
         groups: Dict[str, List[Tuple[str, int]]] = {}
         shards: Dict[str, LineageShard] = {}
-        for blob_id, version in items:
-            sh = self._shard_of(blob_id)
+        for (blob_id, version), sh in zip(items, item_shards):
             shards.setdefault(sh.lineage_id, sh)
             groups.setdefault(sh.lineage_id, []).append((blob_id, version))
         for lid in sorted(groups):
@@ -745,7 +1098,11 @@ class VersionManager:
             with sh.cond:
                 for blob_id, version in groups[lid]:
                     self._complete_locked(sh, blob_id, version)
+                self._repl_flush(sh)
                 sh.cond.notify_all()
+        for lid in sorted(groups):
+            # durability barrier per touched lineage, outside every lock
+            self._repl_barrier(shards[lid])
 
     def wait_metadata(self, blob_id: str, version: int,
                       timeout: Optional[float] = None) -> None:
@@ -811,13 +1168,57 @@ class VersionManager:
         with self._registry_lock:
             return list(self._blob_order)
 
+    def leader_endpoint(self, blob_id: str) -> str:
+        """The wire endpoint currently serving this blob's lineage:
+        the shared ``vmgr`` endpoint with replication off, the lineage's
+        current leader (followers promote on failover) with it on.
+        Failure injection kills *this* to exercise a failover."""
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            return sh.repl.leader_ep if sh.repl is not None else VMGR_ENDPOINT
+
+    def replication_report(self, blob_id: str) -> dict:
+        """HA state of the blob's lineage, for tests and operators:
+        leader endpoint, per-follower journal length and lost flag,
+        failover epoch and current lease expiry."""
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            repl = sh.repl
+            if repl is None:
+                return {"leader": VMGR_ENDPOINT, "followers": [],
+                        "epoch": 0, "lease_expires_at": None}
+            return {
+                "leader": repl.leader_ep,
+                "followers": [(f.endpoint, len(f.records), f.lost)
+                              for f in repl.followers],
+                "epoch": repl.epoch,
+                "lease_expires_at": repl.lease_expires_at,
+            }
+
+    def follower_records(self, blob_id: str, index: int = 0) -> List[dict]:
+        """Copy of one follower's replicated journal (the prefix of the
+        leader's journal successfully streamed to it) — the input the
+        follower-replay equivalence property test feeds back through
+        :meth:`replay_lineage`."""
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            if sh.repl is None:
+                return []
+            return list(sh.repl.followers[index].records)
+
     # ------------------------------------------------ GC: pins + read leases
     def pin(self, blob_id: str, version: int, client: Optional[str] = None,
             ttl: Optional[float] = None) -> str:
         """Pin ``(blob, version)``: GC keeps it until :meth:`unpin` or the
-        lease's clock-based expiry.  Returns the lease id."""
-        self._charge(client)
+        lease's clock-based expiry.  Returns the lease id.
+
+        Pin records replicate with the journal: a failover rebuilds the
+        new leader's lease table from them (expiries are absolute clock
+        instants, so they stay valid across the promotion), while a cold
+        :meth:`recover_from_wal` still drops all leases — process death
+        releases pins, leader death does not."""
         sh = self._shard_of(blob_id)
+        self._charge(client, sh)
         with sh.lock:
             b = self._blob_in(sh, blob_id)
             if version <= 0 or version > b.published:
@@ -828,14 +1229,28 @@ class VersionManager:
                 expires = None if ttl is None else self._clock.now() + ttl
                 self._pins[lease_id] = PinLease(lease_id, blob_id, version,
                                                 client, expires)
+            self._journal(sh, {"op": "pin", "blob": blob_id, "v": version,
+                               "lease": lease_id, "client": client,
+                               "expires": expires})
+            self._repl_flush(sh)
             return lease_id
 
     def unpin(self, lease_id: str, client: Optional[str] = None) -> None:
         """Release a pin lease (idempotent: unknown/expired ids are
         no-ops); the snapshot becomes retireable at the next GC plan."""
-        self._charge(client)
         with self._pins_lock:
-            self._pins.pop(lease_id, None)
+            pin = self._pins.get(lease_id)
+        if pin is None:
+            self._charge(client)
+            return
+        sh = self._shard_of(pin.blob_id)
+        self._charge(client, sh)
+        with sh.lock:
+            with self._pins_lock:
+                if self._pins.pop(lease_id, None) is None:
+                    return
+            self._journal(sh, {"op": "unpin", "lease": lease_id})
+            self._repl_flush(sh)
 
     def _live_pins(self, sh: LineageShard, blob_id: str) -> Set[int]:
         """Unexpired pinned versions, recorded on the *owner* blob of
@@ -886,8 +1301,8 @@ class VersionManager:
         after admission cannot spuriously fail it (the drain barrier
         lets it complete).
         """
-        self._charge(client)
         sh = self._shard_of(blob_id)
+        self._charge(client, sh)
         with sh.lock:
             b = self._blob_in(sh, blob_id)
             if version > b.published:
@@ -906,8 +1321,8 @@ class VersionManager:
         """Release a read lease opened by :meth:`enter_read`."""
         if version == 0:
             return
-        self._charge(client)
         sh = self._shard_of(blob_id)
+        self._charge(client, sh)
         with sh.cond:
             owner = self._owner_record(sh, blob_id, version).blob_id
             key = (owner, version)
@@ -945,12 +1360,13 @@ class VersionManager:
         manager enforces the same policy."""
         if keep_last < 0:
             raise ValueError("keep_last must be >= 0")
-        self._charge(client)
         sh = self._shard_of(blob_id)
+        self._charge(client, sh)
         with sh.lock:
             self._blob_in(sh, blob_id).keep_last = keep_last
-            self._journal(sh.lineage_id, {"op": "retention", "blob": blob_id,
-                                          "keep_last": keep_last})
+            self._journal(sh, {"op": "retention", "blob": blob_id,
+                               "keep_last": keep_last})
+            self._repl_flush(sh)
 
     def gc_epoch(self, blob_id: str) -> int:
         """Monotone retirement epoch: bumped (and journaled) every time
@@ -1004,8 +1420,8 @@ class VersionManager:
         RPC goes out, so recovery can never resurrect a version whose
         pages might be partially deleted.
         """
-        self._charge(client)
         sh = self._shard_of(blob_id)
+        self._charge(client, sh)
         with sh.lock:
             b = self._blob_in(sh, blob_id)
             published = set(range(b.base_version + 1, b.published + 1))
@@ -1045,14 +1461,18 @@ class VersionManager:
                 b.retired.update(newly)
                 b.gc_epoch += 1
                 epoch = b.gc_epoch
-                self._journal(sh.lineage_id,
-                              {"op": "retire", "blob": blob_id,
-                               "versions": newly, "epoch": epoch})
+                self._journal(sh, {"op": "retire", "blob": blob_id,
+                                   "versions": newly, "epoch": epoch})
+                self._repl_flush(sh)
                 for v in newly:
                     rec = b.updates.get(v)
                     if rec is not None:
                         retired_page_ids.extend(pid for pid, *_ in rec.pd)
         if newly:
+            # retire-intent is GC-visible state: make it durable on the
+            # replicas before any sweep delete can go out (a failover
+            # must never resurrect a version whose pages are half gone)
+            self._repl_barrier(sh)
             # Epoch notification outside the lock: listeners (the shared
             # page cache) may take their own locks; the journal record
             # above is already durable, so a listener crash cannot lose
@@ -1086,12 +1506,14 @@ class VersionManager:
         versions = sorted(set(versions))
         if not versions:
             return
-        self._charge(client)
         sh = self._shard_of(blob_id)
+        self._charge(client, sh)
         with sh.lock:
             self._blob_in(sh, blob_id).swept.update(versions)
-            self._journal(sh.lineage_id, {"op": "swept", "blob": blob_id,
-                                          "versions": versions})
+            self._journal(sh, {"op": "swept", "blob": blob_id,
+                               "versions": versions})
+            self._repl_flush(sh)
+        self._repl_barrier(sh)
 
     def unfinalize_sweep(self, blob_id: str, versions: Iterable[int],
                          client: Optional[str] = None) -> None:
@@ -1106,16 +1528,18 @@ class VersionManager:
         versions = set(versions)
         if not versions:
             return
-        self._charge(client)
         sh = self._shard_of(blob_id)
+        self._charge(client, sh)
         with sh.lock:
             b = self._blob_in(sh, blob_id)
             versions = sorted(versions & b.swept)
             if not versions:
                 return  # never finalized: already pending, nothing to journal
             b.swept.difference_update(versions)
-            self._journal(sh.lineage_id, {"op": "unswept", "blob": blob_id,
-                                          "versions": versions})
+            self._journal(sh, {"op": "unswept", "blob": blob_id,
+                               "versions": versions})
+            self._repl_flush(sh)
+        self._repl_barrier(sh)
 
     def all_page_ids(self) -> Set[str]:
         """Every page id any assigned update (any blob, any version,
@@ -1191,18 +1615,112 @@ class VersionManager:
             )
 
     # ------------------------------------------------------------ WAL recovery
+    @staticmethod
+    def _apply_blob_op(b: BlobRecord, rec: dict, now: float) -> None:
+        """Apply one journaled blob op to its record — THE replay rule,
+        shared verbatim by cold WAL recovery and failover promotion (so
+        a promoted follower rebuilds exactly the state a restarted
+        manager would)."""
+        op = rec["op"]
+        if op == "assign":
+            psz = b.psize
+            p0, p1 = pages_spanned(rec["offset"], rec["size"], psz)
+            b.updates[rec["v"]] = UpdateRecord(
+                version=rec["v"], offset=rec["offset"], size=rec["size"],
+                new_blob_size=rec["new_size"],
+                root_pages=root_pages_for(rec["new_size"], psz),
+                p0=p0, p1=p1, is_append=rec["append"], client=rec["client"],
+                pd=tuple(tuple(x) for x in rec["pd"]),
+                # stamp on the VM's own clock: the wall-time default
+                # would make find_stalled never fire under a virtual
+                # clock (now() - monotonic is hugely negative)
+                assigned_at=now,
+                vp=rec.get("vp"),
+            )
+            b.last_assigned = max(b.last_assigned, rec["v"])
+        elif op == "pd":
+            b.updates[rec["v"]].pd = tuple(tuple(x) for x in rec["pd"])
+        elif op == "complete":
+            b.updates[rec["v"]].complete = True
+        elif op == "publish":
+            b.published = rec["v"]
+        elif op == "retention":
+            b.keep_last = rec["keep_last"]
+        elif op == "retire":
+            b.retired.update(rec["versions"])
+            b.gc_epoch = max(b.gc_epoch, rec.get("epoch", 0))
+        elif op == "swept":
+            b.swept.update(rec["versions"])
+        elif op == "unswept":
+            b.swept.difference_update(rec["versions"])
+
+    def replay_lineage(
+        self, records: Sequence[dict],
+    ) -> Tuple[Dict[str, BlobRecord], Dict[str, PinLease], Dict[str, Tuple[str, int]]]:
+        """Rebuild one lineage's state from a journal prefix: the blob
+        records, the still-unexpired pin leases and the assign
+        idempotency keys.  This is what failover runs on the promoted
+        follower's journal; the follower-replay equivalence property
+        test replays arbitrary prefixes through it and compares against
+        the leader.  Records must be a *prefix* of one lineage's journal
+        (the order its shard lock serialized)."""
+        now = self._clock.now()
+        blobs: Dict[str, BlobRecord] = {}
+        pins: Dict[str, PinLease] = {}
+        keys: Dict[str, Tuple[str, int]] = {}
+        for rec in records:
+            op = rec["op"]
+            if op == "create":
+                bid = rec["blob"]
+                blobs[bid] = BlobRecord(bid, rec["psize"], lineage_id=rec["lineage"])
+            elif op == "branch":
+                src = blobs[rec["src"]]
+                blobs[rec["blob"]] = BlobRecord(
+                    blob_id=rec["blob"], psize=src.psize,
+                    parent=(rec["src"], rec["at"]), base_version=rec["at"],
+                    last_assigned=rec["at"], published=rec["at"],
+                    lineage_id=src.lineage_id,
+                )
+            elif op == "pin":
+                exp = rec["expires"]
+                if exp is None or exp > now:
+                    pins[rec["lease"]] = PinLease(rec["lease"], rec["blob"],
+                                                  rec["v"], rec.get("client"),
+                                                  exp)
+            elif op == "unpin":
+                pins.pop(rec["lease"], None)
+            elif op == "failover":
+                pass   # audit record: carries no state
+            else:
+                b = blobs[rec["blob"]]
+                self._apply_blob_op(b, rec, now)
+                if op == "assign" and rec.get("key") is not None:
+                    keys[rec["key"]] = (rec["blob"], rec["v"])
+        return blobs, pins, keys
+
     @classmethod
-    def recover_from_wal(cls, wal_path: str, wire: Optional[Wire] = None) -> "VersionManager":
+    def recover_from_wal(cls, wal_path: str, wire: Optional[Wire] = None, *,
+                         replication: int = 0, lease_ttl: float = 0.25,
+                         fsync_policy: str = "batch") -> "VersionManager":
         """Rebuild full version-manager state from the journal.
 
         ``create`` records root a lineage shard (the record's lineage
         id is the blob itself); ``branch`` records join their source's
         shard.  Every other record is routed to its lineage's shard —
         replay order only matters *within* a lineage, which is exactly
-        the order each shard's lock serialized at journal time.
+        the order each shard's lock serialized at journal time.  Pin
+        (lease) and ``failover`` audit records are skipped: leases die
+        with the process, and epochs restart at 1.
+
+        With ``replication > 0`` the recovered manager also rebuilds
+        each lineage's replica group, bulk-streaming the recovered
+        journal to the fresh followers (wire-accounted) so they are
+        caught up from the first verb.
         """
-        vm = cls(wire=wire)
+        vm = cls(wire=wire, replication=replication, lease_ttl=lease_ttl,
+                 fsync_policy=fsync_policy)
         max_id = 0
+        records_by_lineage: Dict[str, List[dict]] = {}
 
         def blob_rec(blob_id: str) -> BlobRecord:
             return vm._shards[vm._lineage_of[blob_id]].blobs[blob_id]
@@ -1211,6 +1729,8 @@ class VersionManager:
             for line in f:
                 rec = json.loads(line)
                 op = rec["op"]
+                if "lineage" in rec:
+                    records_by_lineage.setdefault(rec["lineage"], []).append(rec)
                 if op == "create":
                     bid = rec["blob"]
                     sh = LineageShard(bid, vm._clock)
@@ -1232,45 +1752,24 @@ class VersionManager:
                     vm._lineage_of[rec["blob"]] = lid
                     vm._blob_order.append(rec["blob"])
                     max_id = max(max_id, int(rec["blob"].split("-")[1]))
-                elif op == "assign":
-                    b = blob_rec(rec["blob"])
-                    psz = b.psize
-                    p0, p1 = pages_spanned(rec["offset"], rec["size"], psz)
-                    b.updates[rec["v"]] = UpdateRecord(
-                        version=rec["v"], offset=rec["offset"], size=rec["size"],
-                        new_blob_size=rec["new_size"],
-                        root_pages=root_pages_for(rec["new_size"], psz),
-                        p0=p0, p1=p1, is_append=rec["append"], client=rec["client"],
-                        pd=tuple(tuple(x) for x in rec["pd"]),
-                        # stamp on the VM's own clock: the wall-time default
-                        # would make find_stalled never fire under a virtual
-                        # clock (now() - monotonic is hugely negative)
-                        assigned_at=vm._clock.now(),
-                        vp=rec.get("vp"),
-                    )
-                    b.last_assigned = max(b.last_assigned, rec["v"])
-                elif op == "pd":
-                    blob_rec(rec["blob"]).updates[rec["v"]].pd = tuple(
-                        tuple(x) for x in rec["pd"]
-                    )
-                elif op == "complete":
-                    blob_rec(rec["blob"]).updates[rec["v"]].complete = True
-                elif op == "publish":
-                    blob_rec(rec["blob"]).published = rec["v"]
-                elif op == "retention":
-                    blob_rec(rec["blob"]).keep_last = rec["keep_last"]
-                elif op == "retire":
-                    b = blob_rec(rec["blob"])
-                    b.retired.update(rec["versions"])
-                    b.gc_epoch = max(b.gc_epoch, rec.get("epoch", 0))
-                elif op == "swept":
-                    blob_rec(rec["blob"]).swept.update(rec["versions"])
-                elif op == "unswept":
-                    blob_rec(rec["blob"]).swept.difference_update(
-                        rec["versions"])
+                elif op in ("pin", "unpin", "failover"):
+                    pass   # soft state: a restarted manager drops leases
+                else:
+                    vm._apply_blob_op(blob_rec(rec["blob"]), rec, vm._clock.now())
         vm._ids = itertools.count(max_id + 1)
         vm._wal_path = wal_path
         vm._wal_file = open(wal_path, "a")
+        if replication > 0:
+            for lid in sorted(vm._shards):
+                sh = vm._shards[lid]
+                sh.repl = _ShardReplication(lid, replication, lease_ttl,
+                                            vm._clock.now())
+                for rec in records_by_lineage.get(lid, ()):
+                    if rec["op"] == "assign" and rec.get("key") is not None:
+                        sh.repl.assigned_keys[rec["key"]] = (rec["blob"], rec["v"])
+                sh.repl.pending = list(records_by_lineage.get(lid, ()))
+                with sh.lock:
+                    vm._repl_flush(sh)
         return vm
 
 

@@ -1,0 +1,389 @@
+"""HA control plane: replicated lineage shards, lease-based failover,
+idempotent re-drive, monitor/fsync/GC fault-handling fixes."""
+
+import time
+
+import pytest
+
+from repro.core import BlobSeerService, EndpointDown
+from repro.core.gc import resweep_after_restore
+from repro.core.scenarios import run_scenario
+from repro.core.sim import Simulator
+from repro.core.transport import Wire
+from repro.core.version_manager import (
+    VMGR_ENDPOINT,
+    VersionManager,
+    VersionUnpublished,
+)
+
+PS = 4 * 1024
+
+
+def _ha_service(**kw):
+    kw.setdefault("n_providers", 4)
+    kw.setdefault("n_meta_shards", 2)
+    kw.setdefault("vm_replication", 2)
+    kw.setdefault("vm_lease_ttl", 0.01)
+    return BlobSeerService(**kw)
+
+
+# --------------------------------------------------------------- replication
+
+
+def test_replication_off_is_the_default_noop():
+    svc = BlobSeerService(n_providers=4, n_meta_shards=2)
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    c.append(bid, b"x" * PS)
+    assert svc.vm_leader_endpoint(bid) == VMGR_ENDPOINT
+    rep = svc.vm.replication_report(bid)
+    assert rep["followers"] == [] and rep["epoch"] == 0
+    ctr = svc.vm.rpc_counters()
+    assert ctr["wal_records"] == 0 and ctr["failovers"] == 0
+    with pytest.raises(RuntimeError):
+        svc.kill_vm_leader(bid)
+
+
+def test_wal_streams_identically_to_every_follower():
+    svc = _ha_service()
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    for _ in range(3):
+        c.append(bid, b"y" * PS)
+    f0 = svc.vm.follower_records(bid, 0)
+    f1 = svc.vm.follower_records(bid, 1)
+    assert f0 == f1 and len(f0) > 0
+    ops = [r["op"] for r in f0]
+    assert ops[0] == "create"
+    for op in ("assign", "complete", "publish"):
+        assert op in ops
+    rep = svc.vm.replication_report(bid)
+    assert rep["leader"] == f"vm-{bid}"
+    assert [lost for _, _, lost in rep["followers"]] == [False, False]
+    assert svc.vm.rpc_counters()["wal_records"] == 2 * len(f0)
+
+
+def _canon_pd(pd):
+    # journal round-trips pd through [list(x) ...]; normalize so the
+    # digest compares content, not list-vs-tuple
+    return tuple(
+        tuple(tuple(e) if isinstance(e, (list, tuple)) else e for e in d)
+        for d in pd
+    )
+
+
+def _digest_of_blobs(blobs):
+    """Comparable snapshot of a lineage's full version state."""
+    out = {}
+    for b in blobs.values():
+        out[b.blob_id] = (
+            b.psize, b.parent, b.base_version, b.last_assigned,
+            b.published, b.keep_last, frozenset(b.retired),
+            frozenset(b.swept),
+            tuple(sorted(
+                (r.version, r.offset, r.size, r.new_blob_size,
+                 r.complete, r.vp, _canon_pd(r.pd))
+                for r in b.updates.values())),
+        )
+    return out
+
+
+def _lineage_digest(vm, bid):
+    sh = vm._shard_of(bid)
+    with sh.lock:
+        return _digest_of_blobs(sh.blobs)
+
+
+def test_follower_replay_equivalence_property():
+    """After every verb, replaying the follower's journal prefix yields
+    exactly the leader's lineage state — the invariant failover's
+    promotion step relies on."""
+    vm = VersionManager(replication=2)
+    bid = vm.create(psize=PS)
+
+    def step_and_check():
+        follower = vm.follower_records(bid, 0)
+        blobs, _pins, _keys = vm.replay_lineage(follower)
+        assert _digest_of_blobs(blobs) == _lineage_digest(vm, bid)
+
+    step_and_check()
+    infos = []
+    for i in range(4):
+        infos.append(vm.assign_version(bid, None, PS, "w",
+                                       pd=((f"p{i}", ("prov-0000",)),)))
+        step_and_check()
+    for info in infos:
+        vm.metadata_complete(bid, info.version, "w")
+        step_and_check()
+    vm.set_retention(bid, keep_last=2)
+    step_and_check()
+    fork = vm.branch(bid, 2, "w")
+    step_and_check()
+    blobs, _, _ = vm.replay_lineage(vm.follower_records(bid, 0))
+    assert fork in blobs and blobs[fork].parent == (bid, 2)
+
+
+def test_leader_death_between_assign_ack_and_complete_never_double_assigns():
+    """The ISSUE's regression: assign acked, leader dies, writer drives
+    metadata_complete into the failover — the promoted follower must
+    already hold the assignment (no version lost, none double-assigned)."""
+    svc = _ha_service()
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    c.append(bid, b"a" * PS)                       # v1 published
+    info = svc.vm.assign_version(bid, None, PS, "w")
+    assert info.version == 2
+    svc.kill_vm_leader(bid)
+    # complete retries through the failover; the replicated journal
+    # already has the v2 assign record
+    svc.vm.metadata_complete(bid, 2, "w")
+    assert svc.vm.rpc_counters()["failovers"] == 1
+    assert svc.vm.get_recent(bid) == 2
+    nxt = svc.vm.assign_version(bid, None, PS, "w")
+    assert nxt.version == 3                        # NOT a re-issued 2
+    rep = svc.vm.replication_report(bid)
+    assert rep["epoch"] == 2 and len(rep["followers"]) == 1
+
+
+def test_idempotency_keys_re_drive_to_the_same_versions():
+    svc = _ha_service()
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    reqs = [(bid, None, PS, ()), (bid, None, PS, ())]
+    keys = ["w/1", "w/2"]
+    first = svc.vm.assign_versions_many(reqs, "w", keys=keys)
+    again = svc.vm.assign_versions_many(reqs, "w", keys=keys)
+    assert [i.version for i in first] == [i.version for i in again] == [1, 2]
+    svc.kill_vm_leader(bid)
+    redriven = svc.vm.assign_versions_many(reqs, "w", keys=keys)
+    assert [i.version for i in redriven] == [1, 2]
+    assert svc.vm.rpc_counters()["failovers"] == 1
+    # a fresh key still assigns the next version exactly once
+    assert svc.vm.assign_versions_many(
+        [(bid, None, PS, ())], "w", keys=["w/3"])[0].version == 3
+
+
+def test_pin_leases_survive_failover_but_not_cold_restart(tmp_path):
+    wal = str(tmp_path / "vm.wal")
+    svc = _ha_service(wal_path=wal)
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    c.append(bid, b"p" * PS)
+    c.append(bid, b"q" * PS)
+    svc.vm.pin(bid, 1, client="w")
+    svc.kill_vm_leader(bid)
+    assert svc.vm.get_recent(bid) == 2             # drives the failover
+    assert svc.vm.rpc_counters()["failovers"] == 1
+    assert 1 in svc.vm.pinned_versions(bid)        # lease carried over
+    # cold restart: process death releases pins
+    vm2 = VersionManager.recover_from_wal(wal, replication=2)
+    assert vm2.pinned_versions(bid) == frozenset()
+    assert vm2.get_recent(bid) == 2
+
+
+def test_failover_waits_out_the_dead_leaders_lease():
+    sim = Simulator(seed=3)
+    svc = BlobSeerService(n_providers=4, n_meta_shards=2,
+                          wire=Wire(clock=sim), vm_replication=1,
+                          vm_lease_ttl=0.5)
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+
+    def prog():
+        c.append(bid, b"x" * PS)
+        svc.kill_vm_leader(bid)
+        lease = svc.vm.replication_report(bid)["lease_expires_at"]
+        c.append(bid, b"y" * PS)
+        return {"lease": lease, "after": sim.now()}
+
+    task = sim.spawn(prog, name="w")
+    sim.run()
+    res = task.result
+    # promotion may not happen before the old lease has provably expired
+    assert res["after"] >= res["lease"]
+    assert svc.vm.rpc_counters()["failovers"] == 1
+    assert svc.vm.get_recent(bid) == 2
+
+
+def test_no_live_follower_surfaces_endpoint_down():
+    svc = _ha_service(vm_replication=1)
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    c.append(bid, b"x" * PS)
+    svc.kill_vm_leader(bid)
+    svc.wire.set_down(f"vm-{bid}-f1", True)
+    with pytest.raises(EndpointDown):
+        svc.vm.get_recent(bid)
+
+
+# ------------------------------------------------------- mid-burst failover
+
+
+def test_mid_burst_failover_loses_nothing_and_stays_deterministic():
+    base = run_scenario("vm_failover", 8, seed=5, ops_per_client=2)
+    assert not base.errors
+    failures = [(0.4 * base.makespan, "vm-leader:0")]
+    kill = run_scenario("vm_failover", 8, seed=5, ops_per_client=2,
+                        failures=failures)
+    replay = run_scenario("vm_failover", 8, seed=5, ops_per_client=2,
+                          failures=failures)
+    assert not kill.errors
+    assert kill.rpc["vm_failovers"] == 1
+    assert kill.ops == base.ops
+    assert kill.trace_digest == replay.trace_digest
+    # exact version cover per lineage: nothing lost, nothing doubled
+    cover = {}
+    for res in kill.client_results.values():
+        if isinstance(res, dict) and "versions" in res:
+            cover.setdefault(res["lineage"], []).extend(res["versions"])
+    for vs in cover.values():
+        assert sorted(vs) == list(range(1, len(vs) + 1))
+
+
+# ------------------------------------------------- monitor error handling
+
+
+class _FailingAgent:
+    def __init__(self, exc):
+        self.exc = exc
+        self.calls = 0
+
+    def rebuild_metadata(self, blob_id, version):
+        self.calls += 1
+        raise self.exc
+
+
+def _stalled_service():
+    svc = BlobSeerService(n_providers=2, n_meta_shards=2)
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    svc.vm.assign_version(bid, None, PS, "w")   # assigned, never completed
+    return svc
+
+
+def test_monitor_counts_retryable_errors_and_keeps_running():
+    svc = _stalled_service()
+    agent = _FailingAgent(EndpointDown("prov-0000 down"))
+    svc.client = lambda *a, **kw: agent
+    svc.start_monitor(interval=0.01, stall_timeout=0.0)
+    deadline = time.monotonic() + 2.0
+    while agent.calls < 3 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    svc.stop_monitor()                           # must NOT raise
+    assert agent.calls >= 3                      # retried, not dead
+    assert svc.rpc_report()["monitor_errors"] >= 3
+
+
+def test_monitor_unexpected_error_stops_loop_and_reraises_on_stop():
+    svc = _stalled_service()
+    agent = _FailingAgent(RuntimeError("metadata corrupt"))
+    svc.client = lambda *a, **kw: agent
+    svc.start_monitor(interval=0.01, stall_timeout=0.0)
+    deadline = time.monotonic() + 2.0
+    while agent.calls < 1 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    time.sleep(0.05)                             # loop had time to keep going
+    with pytest.raises(RuntimeError, match="metadata corrupt"):
+        svc.stop_monitor()
+    assert agent.calls == 1                      # stopped, no silent retry
+    # the fatal is surfaced once, then cleared
+    svc.stop_monitor()
+
+
+# ----------------------------------------------------- GC narrow catch
+
+
+def test_resweep_skips_only_never_assigned_versions(monkeypatch):
+    svc = BlobSeerService(n_providers=2, n_meta_shards=2)
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    c.append(bid, b"x" * PS)
+    monkeypatch.setattr(svc.vm, "retired_versions", lambda b: frozenset({1}))
+
+    def never_assigned(blob_id, version):
+        raise VersionUnpublished(f"{blob_id} v{version}")
+    monkeypatch.setattr(svc.vm, "update_log", never_assigned)
+    out = resweep_after_restore(svc)
+    assert out["swept_pages"] == 0               # skipped, no crash
+
+
+def test_resweep_propagates_unexpected_errors(monkeypatch):
+    svc = BlobSeerService(n_providers=2, n_meta_shards=2)
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    c.append(bid, b"x" * PS)
+    monkeypatch.setattr(svc.vm, "retired_versions", lambda b: frozenset({1}))
+
+    def corrupt(blob_id, version):
+        raise RuntimeError("journal corrupt")
+    monkeypatch.setattr(svc.vm, "update_log", corrupt)
+    with pytest.raises(RuntimeError, match="journal corrupt"):
+        resweep_after_restore(svc)
+
+
+# ------------------------------------------------------------ fsync policy
+
+
+def _drive(vm):
+    bid = vm.create(psize=PS)
+    for _ in range(3):
+        info = vm.assign_version(bid, None, PS, "w")
+        vm.metadata_complete(bid, info.version, "w")
+    return bid
+
+
+def test_fsync_always_syncs_every_record(tmp_path):
+    vm = VersionManager(wal_path=str(tmp_path / "w.wal"),
+                        fsync_policy="always")
+    _drive(vm)
+    assert vm.rpc_counters()["wal_fsyncs"] == len(vm._wal)
+
+
+def test_fsync_batch_coalesces_but_syncs_at_publication(tmp_path):
+    vm = VersionManager(wal_path=str(tmp_path / "w.wal"))   # batch default
+    _drive(vm)
+    ctr = vm.rpc_counters()
+    assert 1 <= ctr["wal_fsyncs"] < len(vm._wal)
+
+
+def test_fsync_never_never_syncs(tmp_path):
+    vm = VersionManager(wal_path=str(tmp_path / "w.wal"),
+                        fsync_policy="never")
+    bid = _drive(vm)
+    assert vm.rpc_counters()["wal_fsyncs"] == 0
+    # records still hit the file (flushed, just not synced)
+    vm2 = VersionManager.recover_from_wal(str(tmp_path / "w.wal"))
+    assert vm2.get_recent(bid) == 3
+
+
+def test_fsync_policy_validated():
+    with pytest.raises(ValueError):
+        VersionManager(fsync_policy="sometimes")
+    with pytest.raises(ValueError):
+        VersionManager(replication=-1)
+
+
+# -------------------------------------------------------------- restart
+
+
+def test_restore_bootstraps_replica_groups(tmp_path):
+    spool = str(tmp_path / "spool")
+    wal = str(tmp_path / "vm.wal")
+    svc = _ha_service(spool_dir=spool, wal_path=wal)
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    v = c.append(bid, b"r" * PS)
+
+    svc2 = BlobSeerService.restore(spool, wal, n_providers=4,
+                                   n_meta_shards=2, vm_replication=2,
+                                   vm_lease_ttl=0.01)
+    assert svc2.vm_leader_endpoint(bid) == f"vm-{bid}"
+    f0 = svc2.vm.follower_records(bid, 0)
+    f1 = svc2.vm.follower_records(bid, 1)
+    assert f0 == f1 and len(f0) > 0              # journal bulk-streamed
+    c2 = svc2.client("r")
+    assert c2.read(bid, v, 0, PS) == b"r" * PS
+    # the recovered group fails over like a live one
+    svc2.kill_vm_leader(bid)
+    assert svc2.vm.get_recent(bid) == v
+    assert svc2.vm.rpc_counters()["failovers"] == 1
