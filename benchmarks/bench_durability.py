@@ -1,0 +1,163 @@
+"""Durability-tier benchmark: erasure coding vs replication under chaos.
+
+Runs the ``durability`` scenario (an ``ec:6+2`` blob and a ``rep:3``
+twin, continuously read) three ways: a no-chaos baseline, a chaos run
+that kills ``m = 2`` shard providers mid-flight and injects silent
+bitrot on a third, and a same-seed replay of the chaos run.  A scrub
+client repairs under a per-round maintenance budget throughout.
+
+Gates (``BENCH_durability.json``, asserted here and by CI):
+
+* zero failed reads in the chaos run — losing any ``m`` of the
+  ``k + m`` shard providers is masked by decode-on-read, and the
+  replicated twin fails over to surviving copies,
+* the injected corruption is detected (digest probe) and repaired, and
+  the final verification round finds zero damaged pages and zero
+  losses,
+* every scrub round's repair traffic stays within the maintenance
+  budget,
+* measured storage overhead: ``ec:6+2`` <= 1.5x the logical bytes
+  (vs >= 2.9x for the 3-way replicated twin) — the durability
+  economics that motivate the tier,
+* same-seed chaos runs replay identical trace digests.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Reporter
+from repro.core.service import BlobSeerService
+from repro.core.scenarios import build_env, run_scenario
+
+N_CLIENTS = 8
+OPS_PER_CLIENT = 3
+SEED = 17
+KILL_PROVIDERS = ("prov-0000", "prov-0001")   # m = 2 of the ec:6+2 geometry
+CORRUPT_PROVIDER = "prov-0003"
+SCRUB_BUDGET = 2 * 1024 * 1024
+
+
+def _run(failures=()):
+    env = build_env(N_CLIENTS, seed=SEED, ops_per_client=OPS_PER_CLIENT,
+                    scenario="durability")
+    env.state["scrub_budget"] = SCRUB_BUDGET
+    result = run_scenario("durability", N_CLIENTS, seed=SEED, env=env,
+                          failures=failures)
+    return env, result
+
+
+def _readers(result) -> dict:
+    total = {"failed_reads": 0, "failed_reads_ec": 0, "failed_reads_rep": 0,
+             "ops": 0}
+    for res in result.client_results.values():
+        if isinstance(res, dict) and "failed_reads" in res:
+            for k in total:
+                total[k] += res[k]
+    return total
+
+
+def _overhead(policy: str) -> float:
+    """Stored-bytes / logical-bytes for one small single-policy blob."""
+    svc = BlobSeerService(n_providers=12, n_meta_shards=2)
+    c = svc.client("w")
+    bid = c.create(psize=4096)
+    svc.set_blob_placement(bid, policy)
+    payload = bytes(range(256)) * 16          # one full 4 KiB page
+    logical = 0
+    for _ in range(8):
+        c.append(bid, payload)
+        logical += len(payload)
+    stored = sum(p.stored_bytes() for p in svc.pm.all_providers())
+    return stored / logical
+
+
+def run(rep: Reporter) -> None:
+    env0, base = _run()
+    assert not base.errors, base.errors
+    kill_at = 0.25 * base.makespan
+
+    failures = [(kill_at, KILL_PROVIDERS[0]),
+                (kill_at * 1.2, KILL_PROVIDERS[1]),
+                (kill_at * 0.8, f"corrupt:{CORRUPT_PROVIDER}")]
+    env1, chaos = _run(failures)
+    env2, replay = _run(failures)
+    assert not chaos.errors, chaos.errors
+
+    scrub = chaos.client_results["durability-000"]
+    readers = _readers(chaos)
+    ec_overhead = _overhead("ec:6+2")
+    rep_overhead = _overhead("rep:3")
+
+    gate = {
+        "failed_reads": readers["failed_reads"],
+        "failed_reads_ec": readers["failed_reads_ec"],
+        "corrupt_detected": scrub["corrupt_found"] >= 1,
+        "repaired_pages": scrub["repaired_pages"],
+        "max_round_repair_bytes": scrub["max_round_repair_bytes"],
+        "budget_respected":
+            scrub["max_round_repair_bytes"] <= SCRUB_BUDGET,
+        "lost_pages": len(scrub["lost"]),
+        "final_damaged": scrub["final_damaged"],
+        "final_losses": len(scrub["final_losses"]),
+        "ec_overhead_x": round(ec_overhead, 4),
+        "rep_overhead_x": round(rep_overhead, 4),
+        "digest_match": chaos.trace_digest == replay.trace_digest,
+    }
+    assert gate["failed_reads"] == 0, gate
+    assert gate["corrupt_detected"], gate
+    assert gate["repaired_pages"] > 0, gate
+    assert gate["budget_respected"], gate
+    assert gate["lost_pages"] == 0, gate
+    assert gate["final_damaged"] == 0, gate
+    assert gate["final_losses"] == 0, gate
+    assert gate["ec_overhead_x"] <= 1.5, gate
+    assert gate["rep_overhead_x"] >= 2.9, gate
+    assert gate["digest_match"], gate
+
+    rep.add("durability_baseline", 0.0,
+            f"n={N_CLIENTS};ops={base.ops};makespan={base.makespan:.4f}s")
+    rep.add("durability_chaos", 0.0,
+            f"kills={len(KILL_PROVIDERS)};ops={chaos.ops};"
+            f"repaired={gate['repaired_pages']};"
+            f"repair_bytes={chaos.rpc['provider_repair_bytes']};"
+            f"makespan={chaos.makespan:.4f}s")
+    rep.add("durability_gate", 0.0,
+            f"failed_reads={gate['failed_reads']};"
+            f"ec_overhead={gate['ec_overhead_x']}x;"
+            f"rep_overhead={gate['rep_overhead_x']}x;"
+            f"digest_match={gate['digest_match']}")
+
+    out = os.path.join(os.getcwd(), "BENCH_durability.json")
+    with open(out, "w") as f:
+        json.dump({
+            "bench": "durability",
+            "n_clients": N_CLIENTS,
+            "ops_per_client": OPS_PER_CLIENT,
+            "seed": SEED,
+            "scrub_budget_bytes": SCRUB_BUDGET,
+            "kill_at_s": kill_at,
+            "killed": list(KILL_PROVIDERS),
+            "corrupted": CORRUPT_PROVIDER,
+            "baseline": {
+                "ops": base.ops, "makespan_s": base.makespan,
+                "trace_digest": base.trace_digest,
+            },
+            "chaos": {
+                "ops": chaos.ops, "makespan_s": chaos.makespan,
+                "scrub": scrub,
+                "readers": readers,
+                "repair_pages": chaos.rpc["provider_repair_pages"],
+                "repair_bytes": chaos.rpc["provider_repair_bytes"],
+                "locate_lookups": chaos.rpc["provider_locate_lookups"],
+                "trace_digest": chaos.trace_digest,
+            },
+            "overhead": {"ec:6+2": ec_overhead, "rep:3": rep_overhead},
+            "gate": gate,
+        }, f, indent=2)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    run(Reporter())

@@ -13,7 +13,8 @@ import sys
 from benchmarks.common import Reporter
 
 BENCHES = ["append", "read", "meta", "space", "gc", "cache", "ckpt",
-           "failover", "kernels", "roofline", "concurrency", "e2e"]
+           "failover", "durability", "kernels", "roofline", "concurrency",
+           "e2e"]
 
 
 def main() -> None:
@@ -37,6 +38,8 @@ def main() -> None:
             from benchmarks import bench_ckpt as m
         elif name == "failover":
             from benchmarks import bench_failover as m
+        elif name == "durability":
+            from benchmarks import bench_durability as m
         elif name == "kernels":
             from benchmarks import bench_kernels as m
         elif name == "roofline":

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.blob import BlobClient
+from repro.core.version_manager import RetiredVersion, VersionUnpublished
 from repro.kernels import ops as kops
 
 
@@ -338,7 +339,15 @@ class BlobCheckpointer:
         while v > 0:
             try:
                 manifest, _ = self.read_manifest(v)
-            except Exception:
+            except (FileNotFoundError, VersionUnpublished, RetiredVersion):
+                # Typed end-of-history ONLY: no checkpoint published or
+                # committed at v (read_manifest's FileNotFoundError), a
+                # never-assigned version, or one GC already retired.
+                # Anything else — a downed endpoint, a wire error, real
+                # corruption — must propagate: swallowing it here used
+                # to silently truncate the listing to whatever prefix
+                # happened to be reachable, and callers pruned/restored
+                # against that lie.
                 break
             key = manifest["step"]
             if key not in seen:

@@ -279,7 +279,7 @@ class BlobClient:
         presumed_offset = offset if offset is not None else 0  # append: relative
         p0_pre, _ = pages_spanned(presumed_offset, size, psize)
         barrier = self._store_full_pages(buf, presumed_offset, psize,
-                                         p0_pre, stored)
+                                         p0_pre, stored, blob_id=blob_id)
         pd_wire = tuple(
             (pid, rel, provs, ln) for rel, (pid, provs, ln) in sorted(stored.items())
         )
@@ -297,8 +297,8 @@ class BlobClient:
             # The optimistically stored pages become orphans (reclaimed by
             # the GC inventory pass).
             stored.clear()
-            barrier = max(barrier, self._store_full_pages(buf, off, psize,
-                                                          info.p0, stored))
+            barrier = max(barrier, self._store_full_pages(
+                buf, off, psize, info.p0, stored, blob_id=blob_id))
 
         # -- phase 3: boundary pages (merge with snapshot vw-1 content) --
         stored_boundary, b3 = self._store_boundary_pages(
@@ -404,7 +404,7 @@ class BlobClient:
             plans.append((idx, self._plan_full_pages(buf, p_off, psize, p0_pre)))
         barrier = self._store_planned(
             plans, stored, psize=psize, digests=digests,
-            use_dedup=use_dedup, acquired=acquired)
+            use_dedup=use_dedup, acquired=acquired, blob_id=blob_id)
         pd_wire = [
             tuple((pid, rel, provs, ln)
                   for rel, (pid, provs, ln) in sorted(s.items()))
@@ -439,7 +439,7 @@ class BlobClient:
                     buf, infos[idx].offset, psize, infos[idx].p0)))
             barrier = max(barrier, self._store_planned(
                 plans, stored, psize=psize, use_dedup=use_dedup,
-                acquired=acquired))
+                acquired=acquired, blob_id=blob_id))
 
         # -- phase 3: boundary pages, intra-batch merges resolved locally --
         prebatch_size = infos[0].prev_size
@@ -519,6 +519,7 @@ class BlobClient:
         digests: Optional[Sequence[Sequence[Tuple[int, int]]]] = None,
         use_dedup: bool = False,
         acquired: Optional[List[str]] = None,
+        blob_id: Optional[str] = None,
     ) -> float:
         """Store many updates' planned pages in one grouped, pipelined
         ``store_pages`` call; returns the store barrier instant.
@@ -569,8 +570,12 @@ class BlobClient:
         else:
             keep_keys = None
 
-        groups = self.pm.allocate(len(flat))
-        puts = [(groups[i], fresh_page_id(), payload)
+        # Per-blob placement: the policy picks the provider-group shape
+        # and tags new page ids so their layout is self-describing
+        # ("pg-...-ec6+2" pages fan into shards on the read path).
+        policy = self.pm.policy_for(blob_id)
+        groups = self.pm.allocate(len(flat), blob_id=blob_id)
+        puts = [(groups[i], fresh_page_id(tag=policy.tag), payload)
                 for i, (_idx, _rel, payload) in enumerate(flat)]
         locations, done_at = self.pm.store_pages(puts, peer=self.name)
         for (idx, rel, payload), (_g, pid, _p), provs in zip(flat, puts,
@@ -592,11 +597,13 @@ class BlobClient:
         psize: int,
         p0: int,
         stored: Dict[int, Tuple[str, Tuple[str, ...], int]],
+        blob_id: Optional[str] = None,
     ) -> float:
         """Store every fully covered page of one update (phase 1);
         returns the pipelined store barrier (0.0 on the wall backend)."""
         return self._store_planned(
-            [(0, self._plan_full_pages(buf, off, psize, p0))], [stored])
+            [(0, self._plan_full_pages(buf, off, psize, p0))], [stored],
+            blob_id=blob_id)
 
     def _store_boundary_pages(
         self,
@@ -643,6 +650,7 @@ class BlobClient:
 
         puts: List[Tuple[Sequence, str, bytes]] = []
         metas: List[Tuple[int, int]] = []
+        policy = self.pm.policy_for(blob_id)
         for k in boundary:
             page_start = k * psize
             page_end_new = min((k + 1) * psize, info.new_size)
@@ -661,7 +669,8 @@ class BlobClient:
             lo = max(off, page_start)
             hi = min(end, page_end_new)
             page[lo - page_start:hi - page_start] = buf[lo - off:hi - off]
-            puts.append((self.pm.allocate(1)[0], fresh_page_id(), bytes(page)))
+            puts.append((self.pm.allocate(1, blob_id=blob_id)[0],
+                         fresh_page_id(tag=policy.tag), bytes(page)))
             metas.append((k, length))
         locations, done_at = self.pm.store_pages(puts, peer=self.name)
         for (_g, pid, _payload), provs, (k, length) in zip(puts, locations,

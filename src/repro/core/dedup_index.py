@@ -48,6 +48,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from repro.core.transport import (
     DEDUP_LOOKUP_REQ_BYTES,
+    DEDUP_REFRESH_REQ_BYTES,
     DEDUP_REGISTER_REQ_BYTES,
     DEDUP_RELEASE_REQ_BYTES,
     Wire,
@@ -150,6 +151,42 @@ class DedupIndex:
                 self._by_digest[key] = _Entry(pid, tuple(provs), length, 1)
                 self._by_pid[pid] = key
                 self._counters["registered"] += 1
+
+    def refresh_providers(
+        self,
+        updates: Sequence[Tuple[str, Tuple[str, ...]]],
+        peer: Optional[str] = None,
+    ) -> int:
+        """Batched provider-refresh: the repair plane's stale-descriptor
+        fix.  ``updates`` holds ``(page_id, new_provider_tuple)`` pairs
+        for pages whose bytes repair (or lifecycle demotion) moved; the
+        entry's frozen ``providers`` tuple is replaced so later dedup
+        hits hand out descriptors pointing at live endpoints instead of
+        the dead one.  Fire-and-forget (repair never gates on the
+        index; a reader holding a not-yet-refreshed descriptor still
+        recovers through the provider manager's relocation overlay).
+        Returns the number of entries actually updated.
+        """
+        if not updates:
+            return 0
+        self.wire.transfer_batch(
+            self.ENDPOINT,
+            [DEDUP_REFRESH_REQ_BYTES] * len(updates),
+            inbound=True,
+            peer=peer,
+            fire_and_forget=True,
+        )
+        n = 0
+        with self._lock:
+            self._counters["refresh_rounds"] += 1
+            for pid, provs in updates:
+                key = self._by_pid.get(pid)
+                if key is None:
+                    continue
+                self._by_digest[key].providers = tuple(provs)
+                self._counters["refreshed"] += 1
+                n += 1
+        return n
 
     def unreference(
         self, page_ids: Sequence[str], peer: Optional[str] = None
@@ -370,4 +407,6 @@ class DedupIndex:
                 "released": 0,
                 "guard_rounds": 0,
                 "dropped": 0,
+                "refresh_rounds": 0,
+                "refreshed": 0,
             }

@@ -66,6 +66,7 @@ from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 from repro.core import segment_tree as st
 from repro.core.pages import UpdateExtent, iter_created_nodes, node_children
+from repro.core.placement import logical_pid
 from repro.core.transport import EndpointDown
 from repro.core.version_manager import VersionUnpublished, owner_fn_for_lineage
 
@@ -284,14 +285,19 @@ def collect_orphans(
             listing = prov.list_pages(peer=peer)
         except EndpointDown:
             continue
+        # Providers list *physical* ids: an EC shard ("...-ec6+2.s3") is
+        # referenced iff its logical page is journaled, so membership is
+        # checked on the logical id (plain pages map to themselves).
         doomed.extend(((prov.pid,), pid) for pid, stored_at in listing
-                      if pid not in referenced and now - stored_at >= grace)
+                      if logical_pid(pid) not in referenced
+                      and now - stored_at >= grace)
     idx = getattr(svc, "dedup_index", None)
     if doomed and idx is not None and idx.ever_registered:
-        kept = idx.orphan_guard([pid for _provs, pid in doomed], peer=peer)
+        kept = idx.orphan_guard([logical_pid(pid) for _provs, pid in doomed],
+                                peer=peer)
         if kept:
             doomed = [(provs, pid) for provs, pid in doomed
-                      if pid not in kept]
+                      if logical_pid(pid) not in kept]
     if not doomed:
         return {"orphan_pages": 0, "orphan_bytes": 0}
     # delete through the provider manager so the sweep counters in

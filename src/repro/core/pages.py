@@ -146,13 +146,19 @@ _pid_lock = threading.Lock()
 _PID_NAMESPACE = "pg"
 
 
-def fresh_page_id() -> str:
+def fresh_page_id(tag: str = "") -> str:
     """Globally unique page id.
 
     A monotone counter + namespace is enough inside one process; a real
     deployment would prefix the client's node id (the paper only
     requires global uniqueness, not structure).
+
+    ``tag`` makes the id self-describing for non-default placements
+    (e.g. ``"ec6+2"`` marks an erasure-coded page; see
+    ``repro.core.placement``): every metadata layer carries the id
+    opaquely, only the provider manager interprets the suffix.
     """
     with _pid_lock:
         n = next(_pid_counter)
-    return f"{_PID_NAMESPACE}-{n:012x}"
+    base = f"{_PID_NAMESPACE}-{n:012x}"
+    return f"{base}-{tag}" if tag else base

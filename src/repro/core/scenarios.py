@@ -30,7 +30,10 @@ the throughput figures.  Failure injection: pass
 chaos task that downs each target at its scheduled virtual instant.  A
 plain target names a data provider; ``"vm-leader:<idx>"`` downs the
 replicated version-manager leader of the ``idx``-th setup blob's
-lineage (resolved at fire time), exercising the lease-based failover.
+lineage (resolved at fire time), exercising the lease-based failover;
+``"corrupt:<provider>"`` silently flips bytes of one stored page
+*behind the provider's back* (bitrot injection — the recorded digest
+stays intact, so only a scrub's ``verify_pages`` probe can tell).
 """
 
 from __future__ import annotations
@@ -604,6 +607,97 @@ def _train_serve_program(env: ScenarioEnv, i: int):
     return trainer_prog
 
 
+def _setup_durability(env: ScenarioEnv) -> None:
+    """Durability-tier fixture: an erasure-coded blob (``ec:6+2``) and a
+    3-way replicated twin, both preloaded with distinct per-chunk
+    content.  The runner's ``failures`` list then kills providers (and
+    injects bitrot via ``corrupt:<prov>``) mid-run; the scrub client
+    repairs while readers keep verifying both blobs."""
+    c = env.client("setup")
+    ec_blob = c.create(psize=env.psize)
+    env.svc.set_blob_placement(ec_blob, "ec:6+2")
+    rep_blob = c.create(psize=env.psize)
+    env.svc.set_blob_placement(rep_blob, "rep:3")
+    chunks = max(2, min(8, env.n_clients))
+    for blob in (ec_blob, rep_blob):
+        for k in range(chunks):
+            c.append(blob, bytes([(k % 251) + 1]) * env.chunk)
+    env.state["blobs"] = [ec_blob, rep_blob]
+    env.state["versions"] = {b: c.get_recent(b) for b in (ec_blob, rep_blob)}
+    env.state["chunks"] = chunks
+    env.state.setdefault("scrub_budget", 2 * 1024 * 1024)
+
+
+def _durability_program(env: ScenarioEnv, i: int):
+    """Client 0 is the scrub plane (budget-capped repair rounds on the
+    virtual clock); everyone else reads both blobs throughout the chaos
+    window and counts failed reads — the availability figure
+    ``bench_durability`` gates on (EC must mask the loss of any ``m``
+    shard providers with ZERO failed reads)."""
+    if i == 0:
+
+        def scrub_prog() -> dict:
+            clock = env.svc.clock
+            budget = env.state["scrub_budget"]
+            rounds = repaired = corrupt = deferred = 0
+            max_round_bytes = 0
+            lost: set = set()
+            for _ in range(max(8, env.ops_per_client * 4)):
+                clock.sleep(0.02)
+                try:
+                    stats = env.svc.scrub(budget_bytes=budget,
+                                          peer=f"scrub{i:03d}")
+                except EndpointDown:
+                    continue  # a probe raced a kill; retried next round
+                rounds += 1
+                repaired += stats["repaired_pages"]
+                corrupt += stats["corrupt_copies"]
+                deferred += stats["deferred_pages"]
+                max_round_bytes = max(max_round_bytes,
+                                      stats["repair_bytes"])
+                lost.update(stats["losses"])
+            # verification round: all damage the chaos injected must be
+            # gone by now (anything this round still finds is residual)
+            final = env.svc.scrub(budget_bytes=budget, peer=f"scrub{i:03d}")
+            return {"ops": rounds, "bytes": 0,
+                    "repaired_pages": repaired,
+                    "corrupt_found": corrupt,
+                    "deferred": deferred,
+                    "max_round_repair_bytes": max_round_bytes,
+                    "lost": sorted(lost),
+                    "final_damaged": final["damaged_pages"],
+                    "final_losses": list(final["losses"])}
+
+        return scrub_prog
+
+    def reader_prog() -> dict:
+        c = env.client(f"d{i:03d}")
+        blobs = env.state["blobs"]
+        versions = env.state["versions"]
+        chunks = env.state["chunks"]
+        clock = env.svc.clock
+        done = bytes_read = 0
+        failed = [0] * len(blobs)
+        for k in range(env.ops_per_client * 2):
+            clock.sleep(0.01)
+            which = (i + k) % len(blobs)
+            bid = blobs[which]
+            off = ((i + k) % chunks) * env.chunk
+            try:
+                data = c.read(bid, versions[bid], off, env.chunk)
+                assert len(data) == env.chunk
+                bytes_read += len(data)
+            except EndpointDown:
+                failed[which] += 1
+            done += 1
+        return {"ops": done, "bytes": bytes_read,
+                "failed_reads": sum(failed),
+                "failed_reads_ec": failed[0],
+                "failed_reads_rep": failed[1]}
+
+    return reader_prog
+
+
 SCENARIOS: Dict[str, Scenario] = {
     "readers": Scenario(
         "readers",
@@ -656,6 +750,15 @@ SCENARIOS: Dict[str, Scenario] = {
         _setup_vm_failover, _vm_failover_program,
         env_defaults={"page_cache_bytes": 0, "vm_replication": 2,
                       "vm_lease_ttl": 0.05},
+    ),
+    "durability": Scenario(
+        "durability",
+        "Self-healing tier under chaos: an ec:6+2 blob and a rep:3 twin "
+        "read continuously while providers die and bitrot is injected; "
+        "a budget-capped scrub plane detects and repairs everything "
+        "(erasure decode on read masks the losses meanwhile)",
+        _setup_durability, _durability_program,
+        env_defaults={"verify_digests": True},
     ),
     "train_serve": Scenario(
         "train_serve",
@@ -739,10 +842,27 @@ def run_scenario(
         def chaos(target=target):
             # Targets resolve at fire time: "vm-leader:<idx>" downs the
             # replicated VM leader of the idx-th setup blob's lineage
-            # (HA failover path); anything else is a data provider.
+            # (HA failover path); "corrupt:<prov>" flips bytes of that
+            # provider's first stored page behind its back (bitrot —
+            # the digest recorded at put time is left alone, so only a
+            # scrub probe can detect it); anything else is a data
+            # provider to kill.
             if target.startswith("vm-leader:"):
                 idx = int(target.split(":", 1)[1])
                 killed = svc.kill_vm_leader(env.state["blobs"][idx])
+            elif target.startswith("corrupt:"):
+                prov = svc.pm.get(target.split(":", 1)[1])
+                victims = sorted(prov.store.iter_pids())
+                if victims:
+                    vic = victims[0]
+                    payload = prov.store.get(vic)
+                    # mutate the raw store, NOT through delete_pages /
+                    # put_pages — silent corruption leaves bookkeeping
+                    # (digests, timestamps) untouched
+                    prov.store.delete(vic)
+                    prov.store.put(
+                        vic, bytes([payload[0] ^ 0xFF]) + payload[1:])
+                killed = target
             else:
                 svc.kill_provider(target)
                 killed = target

@@ -27,6 +27,7 @@ from repro.core.version_manager import (
 )
 from repro.store.file import FilePageStore
 from repro.store.memory import MemoryPageStore
+from repro.store.s3 import S3PageStore
 
 # Default byte budget of the shared read-path page cache.  Sized so the
 # paper-scale experiments (64 KiB pages, MB-scale hot sets) fit whole,
@@ -59,6 +60,8 @@ class BlobSeerService:
         vm_replication: int = 0,
         vm_lease_ttl: float = 0.25,
         wal_fsync: str = "batch",
+        n_cold_providers: int = 0,
+        spool_fsync: str = "never",
     ) -> None:
         """``clock``: scheduling backend for every blocking point in the
         deployment (wall-clock threads by default; pass a
@@ -81,7 +84,14 @@ class BlobSeerService:
         lineage shard (0 = the single shared ``vmgr`` endpoint, the
         pre-HA behavior).  ``vm_lease_ttl``: leader lease duration —
         failover waits it out before promoting.  ``wal_fsync``: the
-        manager WAL's fsync policy (``never``/``batch``/``always``)."""
+        manager WAL's fsync policy (``never``/``batch``/``always``).
+
+        ``n_cold_providers``: S3-class cold-tier endpoints
+        (``cold-NNNN``); they never take new-page placement, only
+        lifecycle demotions (see :meth:`set_lifecycle` /
+        ``core/durability.py``).  ``spool_fsync``: the page spool's
+        fsync policy (``never``/``always``), mirroring ``wal_fsync``
+        for the data plane when ``spool_dir`` is set."""
         if wire is not None:
             self.wire = wire
         elif clock is not None:
@@ -111,23 +121,65 @@ class BlobSeerService:
         self.read_prefetch_pages = read_prefetch_pages
         self.io_workers = io_workers
         self._spool_dir = spool_dir
+        self._spool_fsync = spool_fsync
         self._verify = verify_digests
+        # Per-blob lifecycle policy: blob_id -> demote-after age
+        # (simulated seconds).  Pages older than the threshold are moved
+        # to the cold tier by ``durability.lifecycle_round``.
+        self.lifecycles: Dict[str, float] = {}
         self._monitor: Optional[threading.Thread] = None
         self._monitor_stop = threading.Event()
         self._monitor_errors = 0   # retryable recovery failures (see rpc_report)
         self._monitor_fatal: Optional[BaseException] = None
         for i in range(n_providers):
             self.add_provider(f"prov-{i:04d}")
+        for i in range(n_cold_providers):
+            self.add_provider(f"cold-{i:04d}", tier="cold")
 
     # ------------------------------------------------------------- membership
-    def add_provider(self, pid: str) -> DataProvider:
-        """A provider joins and registers with the provider manager."""
-        store = (
-            FilePageStore(f"{self._spool_dir}/{pid}") if self._spool_dir else MemoryPageStore()
-        )
-        prov = DataProvider(pid=pid, wire=self.wire, store=store, verify_digests=self._verify)
+    def add_provider(self, pid: str, tier: str = "hot") -> DataProvider:
+        """A provider joins and registers with the provider manager.
+
+        ``tier="cold"`` endpoints carry an S3-class object store (cheap
+        durable capacity, per-request billing — see
+        ``repro.store.s3``); they are excluded from new-page placement
+        and filled only by lifecycle demotion.  Reads through them are
+        fronted by the deployment's shared ``PageCache`` like any other
+        endpoint, so only the first touch of a demoted page pays the
+        cold path."""
+        if tier == "cold":
+            store: object = S3PageStore(bucket=pid)
+        elif self._spool_dir:
+            store = FilePageStore(f"{self._spool_dir}/{pid}",
+                                  fsync=self._spool_fsync)
+        else:
+            store = MemoryPageStore()
+        prov = DataProvider(pid=pid, wire=self.wire, store=store,
+                            verify_digests=self._verify, tier=tier)
         self.pm.register(prov)
         return prov
+
+    # ----------------------------------------------------- durability policy
+    def set_blob_placement(self, blob_id: str, spec) -> None:
+        """Select this blob's placement for future pages: ``"rep:N"``
+        or ``"ec:K+M"`` (see ``repro.core.placement``)."""
+        self.pm.set_blob_policy(blob_id, spec)
+
+    def set_lifecycle(self, blob_id: str, demote_after: float) -> None:
+        """Demote this blob's pages to the cold tier once they are
+        ``demote_after`` simulated seconds old (applied by
+        ``durability.lifecycle_round``)."""
+        self.lifecycles[blob_id] = float(demote_after)
+
+    def scrub(self, budget_bytes: Optional[int] = None,
+              peer: str = "scrubber") -> Dict[str, int]:
+        """One scrub/repair round (facade over
+        :func:`repro.core.durability.scrub_round`)."""
+        from repro.core.durability import scrub_round
+
+        if budget_bytes is None:
+            return scrub_round(self, peer=peer)
+        return scrub_round(self, budget_bytes=budget_bytes, peer=peer)
 
     def client(self, name: Optional[str] = None,
                prefetch_pages: Optional[int] = None) -> BlobClient:

@@ -77,6 +77,16 @@ VM_WAL_PROMOTE_BYTES = 64  # the lease-takeover promotion handshake RPC
 DEDUP_LOOKUP_REQ_BYTES = 24    # one (digest64, length) probe in lookup_and_acquire
 DEDUP_REGISTER_REQ_BYTES = 48  # one (digest64, page descriptor) in register
 DEDUP_RELEASE_REQ_BYTES = 24   # one reference-drop command in release/unreference
+DEDUP_REFRESH_REQ_BYTES = 56   # one (page_id, new provider tuple) in refresh_providers
+
+# Wire-cost model of the durability plane (``core/durability.py``).
+# A scrub round asks each provider to re-digest its stored pages in
+# place (one batched round trip, one probe entry per page — bytes stay
+# on the provider), and consults the provider manager's relocation
+# overlay when a descriptor's replica list is exhausted (repair and
+# lifecycle demotion move bytes without rewriting published metadata).
+SCRUB_PROBE_BYTES = 24     # one per-page verify entry in a scrub batch
+PM_LOCATE_REQ_BYTES = 40   # one relocation-overlay lookup at the manager
 
 
 @dataclass

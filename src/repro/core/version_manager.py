@@ -1557,6 +1557,34 @@ class VersionManager:
                             out.add(pd[0])
         return out
 
+    def page_locations(self) -> Dict[str, Tuple[str, Tuple[str, ...], int]]:
+        """Durability inventory: every *live* journaled page's
+        ``page_id -> (blob_id, providers, length)``.
+
+        The scrub plane diffs this against what providers actually hold
+        to find dead-provider gaps and missing copies; the lifecycle
+        plane uses the blob id to apply per-blob demotion policy.  Pages
+        of swept versions are excluded (their bytes are gone or going —
+        repairing them would resurrect garbage), and a page journaled by
+        several versions (copy-on-write sharing, dedup hits) reports the
+        first descriptor seen — descriptors for one page are identical
+        by construction.  Local control-plane bookkeeping, like
+        :meth:`all_page_ids` (the GC's orphan scan twin).
+        """
+        out: Dict[str, Tuple[str, Tuple[str, ...], int]] = {}
+        for sh in self._all_shards():
+            with sh.lock:
+                for bid in sorted(sh.blobs):
+                    b = sh.blobs[bid]
+                    for v in sorted(b.updates):
+                        if v in b.swept:
+                            continue
+                        for pd in b.updates[v].pd:
+                            pid, _rel, provs, length = pd
+                            out.setdefault(
+                                pid, (b.blob_id, tuple(provs), length))
+        return out
+
     def mark_roots(self) -> Dict[str, List[Tuple[int, int]]]:
         """Every live snapshot the mark phase must walk: blob id ->
         [(version, root_pages)] over the blob's own published, non-retired

@@ -2,5 +2,6 @@
 
 from repro.store.memory import MemoryPageStore
 from repro.store.file import FilePageStore
+from repro.store.s3 import S3PageStore
 
-__all__ = ["MemoryPageStore", "FilePageStore"]
+__all__ = ["MemoryPageStore", "FilePageStore", "S3PageStore"]

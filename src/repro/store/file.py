@@ -14,8 +14,19 @@ from typing import Iterator, Optional
 
 
 class FilePageStore:
-    def __init__(self, root: str) -> None:
+    """``fsync`` policy mirrors the VM WAL's: ``"never"`` (default —
+    rename-atomic but a power cut may lose the page) or ``"always"``
+    (fsync the file before the rename and the directory after it, so a
+    renamed page is durable, not just atomic)."""
+
+    FSYNC_POLICIES = ("never", "always")
+
+    def __init__(self, root: str, fsync: str = "never") -> None:
+        if fsync not in self.FSYNC_POLICIES:
+            raise ValueError(
+                f"fsync policy {fsync!r} not in {self.FSYNC_POLICIES}")
         self.root = root
+        self.fsync = fsync
         os.makedirs(root, exist_ok=True)
         self._lock = threading.Lock()
 
@@ -29,9 +40,28 @@ class FilePageStore:
         if os.path.exists(path):
             return  # immutable: identical by pid-uniqueness
         tmp = path + ".tmp"
-        with open(tmp, "wb") as f:
-            f.write(payload)
-        os.replace(tmp, path)
+        try:
+            with open(tmp, "wb") as f:
+                f.write(payload)
+                if self.fsync == "always":
+                    f.flush()
+                    os.fsync(f.fileno())
+            os.replace(tmp, path)
+        except BaseException:
+            # never leak the temp file: a failed write must leave the
+            # spool exactly as it was
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+            raise
+        if self.fsync == "always":
+            # the rename itself is only durable once the directory is
+            dfd = os.open(os.path.dirname(path), os.O_RDONLY)
+            try:
+                os.fsync(dfd)
+            finally:
+                os.close(dfd)
 
     def get(self, pid: str) -> Optional[bytes]:
         try:

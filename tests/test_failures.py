@@ -42,8 +42,9 @@ def test_rereplication_restores_fault_tolerance():
                       svc.vm.root_pages_published(bid, v), 0, 32)
     locations = {d.page_id: list(d.providers) for d in pd}
     svc.kill_provider("prov-0001")
-    moved = svc.pm.rereplicate_from("prov-0001", locations)
+    moved, losses = svc.pm.rereplicate_from("prov-0001", locations)
     assert moved > 0
+    assert losses == []
     for pid, locs in locations.items():
         assert "prov-0001" not in locs
         assert len(locs) == 2

@@ -32,6 +32,7 @@ SNIPPET_FILES = [
     "docs/write-path.md",
     "docs/concurrency.md",
     "docs/checkpoint.md",
+    "docs/durability.md",
 ]
 
 _FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
