@@ -1,0 +1,180 @@
+"""Subscription plane benchmark: watch/notify vs the poll baseline.
+
+BlobSeer clients learn of new versions by polling ``get_recent`` — one
+control-plane RPC per watcher per poll round, O(W) for W watchers no
+matter how few publications happen.  The subscription plane registers
+watch leases per lineage shard and pushes batched, coalesced,
+fire-and-forget notify sends per *inbox endpoint*, so a burst of K
+publications costs O(K x endpoints-with-watchers) RPCs, never O(W).
+
+This benchmark runs 10k simulated watchers (multiplexed over 16 gateway
+inboxes) against 8 pinned writers and asserts the contract:
+
+* notify RPC count is identical at 1k and 10k watchers (it scales with
+  publications and endpoints, not watcher count),
+* the poll twin spends >= 10x more control-plane RPCs for the same
+  information,
+* every lease's delivered stream is exactly ``1..final`` — per-watcher
+  monotone, nothing skipped past ``from_version``, no duplicates —
+  both in the quiet run and with a lineage leader killed mid-burst
+  (the promoted follower resumes deliveries with no gap and no dup),
+* same-seed kill runs replay identical trace digests.
+
+Emits ``BENCH_watch.json`` with a ``gate`` dict CI asserts on.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Reporter
+from repro.core.scenarios import BURST, N_WATCH_WRITERS, build_env, \
+    run_scenario
+
+N_GATEWAYS = 16
+N_CLIENTS = N_WATCH_WRITERS + N_GATEWAYS
+OPS_PER_CLIENT = 3
+SEED = 13
+WATCHERS = 10_000
+SMALL_WATCHERS = 1_000
+KILL_FRACTION = 0.4   # of the baseline makespan — mid-burst, not at a seam
+
+FINAL = OPS_PER_CLIENT * BURST  # last version every watcher must see
+
+
+def _run(scenario: str, watchers: int, failures=()):
+    env = build_env(N_CLIENTS, seed=SEED, ops_per_client=OPS_PER_CLIENT,
+                    scenario=scenario)
+    env.state["watchers"] = watchers
+    result = run_scenario(scenario, N_CLIENTS, seed=SEED, env=env,
+                          failures=failures)
+    return env, result
+
+
+def _delivery_audit(result) -> dict:
+    """Check every lease's delivered stream against ``1..FINAL``."""
+    want = list(range(1, FINAL + 1))
+    leases = missed = duplicated = out_of_order = 0
+    for res in result.client_results.values():
+        if not (isinstance(res, dict) and "delivered" in res):
+            continue
+        for stream in res["delivered"].values():
+            leases += 1
+            if sorted(set(stream)) != sorted(stream):
+                duplicated += 1
+            if stream != sorted(stream):
+                out_of_order += 1
+            if set(want) - set(stream):
+                missed += 1
+    return {"leases": leases, "missed": missed, "duplicated": duplicated,
+            "out_of_order": out_of_order}
+
+
+def _poll_rpcs(result) -> int:
+    return sum(res.get("poll_rpcs", 0)
+               for res in result.client_results.values()
+               if isinstance(res, dict))
+
+
+def run(rep: Reporter) -> None:
+    _, base = _run("watchers", WATCHERS)
+    assert not base.errors, base.errors
+    _, small = _run("watchers", SMALL_WATCHERS)
+    assert not small.errors, small.errors
+    _, poll = _run("watchers_poll", WATCHERS)
+    assert not poll.errors, poll.errors
+
+    kill_time = KILL_FRACTION * base.makespan
+    failures = [(kill_time, "vm-leader:0")]
+    _, kill = _run("watchers", WATCHERS, failures=failures)
+    assert not kill.errors, kill.errors
+    _, replay = _run("watchers", WATCHERS, failures=failures)
+
+    notify_rpcs = base.rpc["watch_notify_rpcs"]
+    notify_rpcs_small = small.rpc["watch_notify_rpcs"]
+    poll_rpcs = _poll_rpcs(poll)
+    audit = _delivery_audit(base)
+    kill_audit = _delivery_audit(kill)
+
+    gate = {
+        "watchers": WATCHERS,
+        "notify_rpcs": notify_rpcs,
+        "notify_rpcs_at_1k": notify_rpcs_small,
+        "publication_scaled": notify_rpcs == notify_rpcs_small,
+        "poll_rpcs": poll_rpcs,
+        "rpc_ratio": poll_rpcs / max(notify_rpcs, 1),
+        "missed_deliveries": audit["missed"] + kill_audit["missed"],
+        "duplicated_deliveries": (audit["duplicated"]
+                                  + kill_audit["duplicated"]),
+        "out_of_order_deliveries": (audit["out_of_order"]
+                                    + kill_audit["out_of_order"]),
+        "failovers": kill.rpc["vm_failovers"],
+        "digest_match": kill.trace_digest == replay.trace_digest,
+    }
+    assert audit["leases"] == WATCHERS, audit
+    assert kill_audit["leases"] == WATCHERS, kill_audit
+    assert gate["publication_scaled"], gate
+    assert gate["rpc_ratio"] >= 10.0, gate
+    assert gate["missed_deliveries"] == 0, gate
+    assert gate["duplicated_deliveries"] == 0, gate
+    assert gate["out_of_order_deliveries"] == 0, gate
+    assert gate["failovers"] == 1, gate
+    assert gate["digest_match"], gate
+
+    rep.add("watch_notify", 0.0,
+            f"watchers={WATCHERS};notify_rpcs={notify_rpcs};"
+            f"entries={base.rpc['watch_notify_entries']};"
+            f"versions={base.rpc['watch_notify_versions']};"
+            f"makespan={base.makespan:.4f}s")
+    rep.add("watch_poll_twin", 0.0,
+            f"watchers={WATCHERS};poll_rpcs={poll_rpcs};"
+            f"ratio_x{gate['rpc_ratio']:.1f};"
+            f"makespan={poll.makespan:.4f}s")
+    rep.add("watch_failover", 0.0,
+            f"kill_t={kill_time:.4f}s;failovers={gate['failovers']};"
+            f"missed={kill_audit['missed']};"
+            f"duplicated={kill_audit['duplicated']};"
+            f"digest_match={gate['digest_match']}")
+
+    out = os.path.join(os.getcwd(), "BENCH_watch.json")
+    with open(out, "w") as f:
+        json.dump({
+            "bench": "watch",
+            "n_clients": N_CLIENTS,
+            "n_gateways": N_GATEWAYS,
+            "ops_per_client": OPS_PER_CLIENT,
+            "burst": BURST,
+            "final_version": FINAL,
+            "seed": SEED,
+            "kill_time": kill_time,
+            "baseline": {
+                "watchers": WATCHERS,
+                "notify_rpcs": notify_rpcs,
+                "notify_entries": base.rpc["watch_notify_entries"],
+                "notify_versions": base.rpc["watch_notify_versions"],
+                "dropped_sends": base.rpc["watch_dropped_sends"],
+                "makespan_s": base.makespan,
+                "trace_digest": base.trace_digest,
+            },
+            "small": {
+                "watchers": SMALL_WATCHERS,
+                "notify_rpcs": notify_rpcs_small,
+            },
+            "poll_twin": {
+                "watchers": WATCHERS,
+                "poll_rpcs": poll_rpcs,
+                "makespan_s": poll.makespan,
+            },
+            "kill": {
+                "failovers": kill.rpc["vm_failovers"],
+                "makespan_s": kill.makespan,
+                "trace_digest": kill.trace_digest,
+            },
+            "gate": gate,
+        }, f, indent=2)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    run(Reporter())

@@ -64,6 +64,132 @@ class ReadError(RuntimeError):
     :class:`~repro.core.version_manager.RetiredVersion` instead.)"""
 
 
+class WatchInbox:
+    """A client's notification inbox: the delivery end of the
+    subscription plane (see docs/watch.md).
+
+    The version manager pushes coalesced publication events here as
+    fire-and-forget wire batches addressed to ``self.endpoint``; the
+    inbox queues them per watch lease and wakes blocked
+    :meth:`wait_for` callers.  Under a virtual clock an event becomes
+    *visible* only at its wire arrival instant (``ready_at``), so the
+    push plane never beats the wire.
+
+    The inbox also enforces the delivery contract locally: per lease it
+    keeps a monotone watermark and drops anything at or below it — a
+    failover re-flush (the promoted leader re-covering the un-journaled
+    tail of deliveries) is deduplicated here, which is what makes
+    "no gap" and "no duplicate" compose.  One inbox (one wire endpoint)
+    can carry any number of leases: notify cost scales with endpoints,
+    not leases.
+    """
+
+    def __init__(self, wire: Wire, name: str) -> None:
+        self.wire = wire
+        self.endpoint = f"inbox-{name}"
+        self._clock = wire.clock
+        self._cond = self._clock.condition()
+        # per-lease pending events, each (version, ready_at); both
+        # components are monotone within a queue
+        self._queues: Dict[str, List[Tuple[int, float]]] = {}
+        self._last: Dict[str, int] = {}      # newest version ever accepted
+        self._consumed: Dict[str, int] = {}  # newest version drained by poll
+        self._closed: set = set()
+        self.delivered = 0            # versions accepted
+        self.duplicates_dropped = 0   # re-deliveries the watermark caught
+
+    def track(self, watch_id: str, from_version: int) -> None:
+        """Open local state for a lease.  Catch-up deliveries may land
+        *before* this (the manager flushes inside ``watch()``), so the
+        watermark only ever moves up."""
+        with self._cond:
+            self._queues.setdefault(watch_id, [])
+            self._last[watch_id] = max(self._last.get(watch_id, -1),
+                                       from_version)
+            self._consumed.setdefault(watch_id, from_version)
+            self._closed.discard(watch_id)
+
+    def forget(self, watch_id: str) -> None:
+        """Drop a lease's queue and refuse its future deliveries
+        (client-side half of ``unwatch``)."""
+        with self._cond:
+            self._queues.pop(watch_id, None)
+            self._closed.add(watch_id)
+            self._cond.notify_all()
+
+    def deliver(self, entries: Sequence[Tuple[str, str, Tuple[int, ...]]],
+                ready_at: float = 0.0) -> None:
+        """Receive one notify batch: ``(watch_id, blob_id, versions)``
+        entries.  Called by the version manager (possibly under its
+        shard lock — this lock is leaf-level and never blocks)."""
+        if not self._clock.is_virtual:
+            ready_at = 0.0
+        with self._cond:
+            for wid, _blob_id, versions in entries:
+                if wid in self._closed:
+                    continue
+                q = self._queues.setdefault(wid, [])
+                last = self._last.get(wid, -1)
+                for v in versions:
+                    if v <= last:
+                        self.duplicates_dropped += 1
+                        continue
+                    q.append((v, ready_at))
+                    last = v
+                    self.delivered += 1
+                self._last[wid] = last
+            self._cond.notify_all()
+
+    def poll(self, watch_id: str) -> List[int]:
+        """Drain and return the lease's arrived versions (ascending).
+        Events still in flight on the wire (``ready_at`` in the future)
+        stay queued."""
+        now = self._clock.now()
+        with self._cond:
+            q = self._queues.get(watch_id)
+            if not q:
+                return []
+            i = 0
+            while i < len(q) and q[i][1] <= now:
+                i += 1
+            out = [v for v, _ in q[:i]]
+            del q[:i]
+            if out:
+                self._consumed[watch_id] = max(
+                    self._consumed.get(watch_id, -1), out[-1])
+            return out
+
+    def wait_for(self, watch_id: str, version: int,
+                 timeout: Optional[float] = None) -> None:
+        """Block (through the deployment clock) until a version
+        ``>= version`` has arrived on the lease — delivered by push, or
+        already drained by an earlier :meth:`poll`.  Raises
+        ``TimeoutError`` on the deadline."""
+        deadline = (None if timeout is None
+                    else self._clock.now() + timeout)
+        with self._cond:
+            while True:
+                now = self._clock.now()
+                if self._consumed.get(watch_id, -1) >= version:
+                    return
+                q = self._queues.get(watch_id, ())
+                arrival = None
+                for v, at in q:
+                    if v >= version:
+                        arrival = at
+                        break
+                if arrival is not None and arrival <= now:
+                    return
+                # next wake: the event's wire arrival or the deadline
+                wake = arrival
+                if deadline is not None and (wake is None or deadline < wake):
+                    wake = deadline
+                if wake is not None and wake <= now:
+                    raise TimeoutError(
+                        f"wait_for {watch_id} v{version}")
+                self._cond.wait(None if wake is None else wake - now)
+
+
 class BlobClient:
     """One client process (paper §3.1: 'Clients may create blobs and
     read, write and append data to them')."""
@@ -114,6 +240,9 @@ class BlobClient:
         # (a re-driven request after a VM leader failover returns its
         # already-journaled version instead of double-assigning)
         self._req_seq = itertools.count(1)
+        # notification inbox, created lazily on first watch (one wire
+        # endpoint per client, any number of leases on it)
+        self._watch_inbox: Optional[WatchInbox] = None
 
     def _assign_key(self) -> str:
         return f"{self.name}/{next(self._req_seq)}"
@@ -784,3 +913,57 @@ class BlobClient:
         """Keep the newest ``keep_last`` published snapshots at GC time
         (plus pins, branch roots and in-flight anchors); 0 = keep all."""
         self.vm.set_retention(blob_id, keep_last, client=self.name)
+
+    # -------------------------------------------- subscriptions: watch/notify
+    @property
+    def inbox(self) -> WatchInbox:
+        """This client's notification inbox (created and registered
+        with the version manager on first use)."""
+        if self._watch_inbox is None:
+            self._watch_inbox = WatchInbox(self.wire, self.name)
+            self.vm.register_inbox(self._watch_inbox)
+        return self._watch_inbox
+
+    def watch(self, blob_id: str, from_version: int = 0,
+              ttl: Optional[float] = None) -> str:
+        """Lease a push subscription on ``blob_id``: publications past
+        ``from_version`` are delivered to this client's :attr:`inbox`
+        (already-published versions catch up immediately).  ``ttl``
+        arms a renewable clock-based expiry (``None`` = until
+        :meth:`unwatch`).  Returns the lease id — hand it to
+        :meth:`poll_notifications` / ``inbox.wait_for``."""
+        inbox = self.inbox
+        wid = self.vm.watch(blob_id, from_version, endpoint=inbox.endpoint,
+                            client=self.name, ttl=ttl)
+        inbox.track(wid, from_version)
+        return wid
+
+    def unwatch(self, watch_id: str) -> None:
+        """Cancel a watch lease (idempotent); nothing is delivered to
+        it afterward."""
+        self.vm.unwatch(watch_id, client=self.name)
+        if self._watch_inbox is not None:
+            self._watch_inbox.forget(watch_id)
+
+    def renew_watch(self, watch_id: str, ttl: Optional[float]) -> None:
+        """Extend a watch lease's expiry (``None`` = make permanent)."""
+        self.vm.renew_watch(watch_id, ttl, client=self.name)
+
+    def poll_notifications(self, watch_id: str) -> List[int]:
+        """Drain the lease's arrived version notifications (ascending,
+        monotone across calls, no duplicates)."""
+        return self.inbox.poll(watch_id)
+
+    def wait_for_version(self, blob_id: str, version: int,
+                         timeout: Optional[float] = None) -> int:
+        """Block until ``blob_id``'s snapshot ``version`` is published,
+        by subscription instead of SYNC polling: takes a temporary
+        watch from ``version - 1``, waits for the push, and releases
+        the lease.  Returns ``version``; raises ``TimeoutError`` on the
+        deadline."""
+        wid = self.watch(blob_id, from_version=max(0, version - 1))
+        try:
+            self.inbox.wait_for(wid, version, timeout=timeout)
+        finally:
+            self.unwatch(wid)
+        return version

@@ -378,3 +378,59 @@ class PageCache:
                 keys.discard(vkey)
                 if not keys:
                     del self._by_page[vkey[0]]
+
+
+class InvalidationSubscriber:
+    """Push-based cache invalidation: the subscription plane's answer
+    to the PR 4 retire-intent hook.
+
+    The version manager's GC listener interface stays the same
+    (``fn(blob_id, versions, gc_epoch, page_ids)``), but delivery is
+    now modelled as a *push*: the retiring leader ships one batched
+    fire-and-forget invalidation event per retire intent to this
+    subscriber's endpoint (``CACHE_INVAL_EVT_BYTES`` per page id), and
+    the page cache evicts at the event — the wire-accounted twin of a
+    real deployment where cache nodes subscribe to gc_epoch bumps
+    instead of polling them.  A down endpoint still invalidates
+    (conservative: eviction is always safe, serving swept bytes never
+    is).
+    """
+
+    def __init__(self, cache: PageCache, wire=None,
+                 endpoint: str = "cache-inval") -> None:
+        self._cache = cache
+        self._wire = wire
+        self.endpoint = endpoint
+        self._lock = threading.Lock()
+        self.pushes = 0         # invalidation batches received
+        self.page_ids = 0       # page ids those batches carried
+        self.invalidated = 0    # cache entries actually evicted
+
+    def __call__(self, blob_id: str, versions: Tuple[int, ...],
+                 gc_epoch: int, page_ids: Tuple[str, ...]) -> None:
+        """GC-listener entry point (fired outside the shard lock)."""
+        if not page_ids:
+            return
+        if self._wire is not None:
+            from repro.core.transport import (CACHE_INVAL_EVT_BYTES,
+                                              EndpointDown)
+            try:
+                self._wire.transfer_batch(
+                    self.endpoint, [CACHE_INVAL_EVT_BYTES] * len(page_ids),
+                    inbound=True, fire_and_forget=True)
+            except EndpointDown:
+                pass  # evict anyway: stale eviction is safe, stale data is not
+        removed = self._cache.invalidate_pages(page_ids)
+        with self._lock:
+            self.pushes += 1
+            self.page_ids += len(page_ids)
+            self.invalidated += removed
+
+    def counters(self) -> Dict[str, int]:
+        with self._lock:
+            return {"pushes": self.pushes, "page_ids": self.page_ids,
+                    "invalidated": self.invalidated}
+
+    def reset_counters(self) -> None:
+        with self._lock:
+            self.pushes = self.page_ids = self.invalidated = 0

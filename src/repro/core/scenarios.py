@@ -698,6 +698,127 @@ def _durability_program(env: ScenarioEnv, i: int):
     return reader_prog
 
 
+N_WATCH_WRITERS = 8  # writer clients in the watchers scenarios; the rest
+#                      are gateway clients multiplexing many watch leases
+
+
+def _setup_watchers(env: ScenarioEnv) -> None:
+    """Subscription-plane fixture: ``N_WATCH_WRITERS`` blobs (one pinned
+    writer each) and ``state["watchers"]`` simulated subscribers spread
+    round-robin over the *gateway* clients.  Each gateway holds many
+    watch leases on ONE shared inbox endpoint, so the notify fan-out is
+    bounded by gateways (endpoints-with-watchers), never by the watcher
+    count — the O(K x endpoints) property ``bench_watch`` gates on."""
+    if env.n_clients <= N_WATCH_WRITERS:
+        raise ValueError(
+            f"watchers scenario needs > {N_WATCH_WRITERS} clients "
+            f"({N_WATCH_WRITERS} writers + at least one gateway)")
+    c = env.client("setup")
+    blobs = [c.create(psize=env.psize) for _ in range(N_WATCH_WRITERS)]
+    env.state["blobs"] = blobs
+    env.state["final"] = env.ops_per_client * BURST
+    total = int(env.state.get("watchers", 64))
+    n_gateways = env.n_clients - N_WATCH_WRITERS
+    gateways: List[Tuple[BlobClient, List[Tuple[str, str]]]] = []
+    for g in range(n_gateways):
+        client = env.client(f"gw{g:03d}")
+        leases: List[Tuple[str, str]] = []
+        for w in range(g, total, n_gateways):
+            bid = blobs[w % len(blobs)]
+            leases.append((client.watch(bid, from_version=0), bid))
+        gateways.append((client, leases))
+    env.state["gateways"] = gateways
+
+
+def _watcher_program(env: ScenarioEnv, i: int):
+    """Writers (``i < N_WATCH_WRITERS``) publish append bursts to their
+    pinned blob; gateways block on their inboxes until every lease has
+    been pushed the final version, then drain the delivered streams."""
+    blobs = env.state["blobs"]
+    final = env.state["final"]
+
+    if i < N_WATCH_WRITERS:
+
+        def writer_prog() -> dict:
+            bid = blobs[i]
+            c = env.client(f"wr{i:03d}")
+            payload = bytes([i % 251 + 1]) * env.chunk
+            versions: List[int] = []
+            for _ in range(env.ops_per_client):
+                versions.extend(c.append_many(bid, [payload] * BURST))
+            return {"ops": len(versions), "bytes": len(versions) * env.chunk,
+                    "versions": versions}
+
+        return writer_prog
+
+    def gateway_prog() -> dict:
+        client, leases = env.state["gateways"][i - N_WATCH_WRITERS]
+        delivered: Dict[str, List[int]] = {}
+        for wid, _bid in leases:
+            client.inbox.wait_for(wid, final, timeout=600.0)
+            delivered[wid] = client.poll_notifications(wid)
+        return {"ops": sum(len(vs) for vs in delivered.values()),
+                "bytes": 0, "delivered": delivered}
+
+    return gateway_prog
+
+
+def _setup_watchers_poll(env: ScenarioEnv) -> None:
+    """Poll-twin fixture: same blobs/writers/watcher spread as
+    ``watchers``, but NO leases — gateways learn of publications by
+    polling ``get_recent`` per simulated watcher, the control-plane
+    cost the subscription plane exists to remove."""
+    if env.n_clients <= N_WATCH_WRITERS:
+        raise ValueError(
+            f"watchers_poll scenario needs > {N_WATCH_WRITERS} clients "
+            f"({N_WATCH_WRITERS} writers + at least one gateway)")
+    c = env.client("setup")
+    blobs = [c.create(psize=env.psize) for _ in range(N_WATCH_WRITERS)]
+    env.state["blobs"] = blobs
+    env.state["final"] = env.ops_per_client * BURST
+    total = int(env.state.get("watchers", 64))
+    n_gateways = env.n_clients - N_WATCH_WRITERS
+    env.state["poll_sets"] = [
+        [blobs[w % len(blobs)] for w in range(g, total, n_gateways)]
+        for g in range(n_gateways)
+    ]
+
+
+def _poll_watcher_program(env: ScenarioEnv, i: int):
+    """Identical writers; each gateway polls ``get_recent`` for every
+    simulated watcher it fronts until all have observed the final
+    version — one RPC per watcher per round, O(W) on the control plane
+    (the figure the notify path beats by >= 10x)."""
+    if i < N_WATCH_WRITERS:
+        return _watcher_program(env, i)
+
+    def poll_prog() -> dict:
+        targets = env.state["poll_sets"][i - N_WATCH_WRITERS]
+        final = env.state["final"]
+        interval = float(env.state.get("poll_interval", 0.05))
+        c = env.client(f"pg{i:03d}")
+        clock = env.svc.clock
+        last = [0] * len(targets)
+        delivered: List[List[int]] = [[] for _ in targets]
+        poll_rpcs = 0
+        while any(lv < final for lv in last):
+            for w, bid in enumerate(targets):
+                if last[w] >= final:
+                    continue
+                v = c.get_recent(bid)
+                poll_rpcs += 1
+                if v > last[w]:
+                    delivered[w].extend(range(last[w] + 1, v + 1))
+                    last[w] = v
+            if any(lv < final for lv in last):
+                clock.sleep(interval)
+        return {"ops": sum(len(vs) for vs in delivered),
+                "bytes": 0, "poll_rpcs": poll_rpcs,
+                "delivered": {str(w): vs for w, vs in enumerate(delivered)}}
+
+    return poll_prog
+
+
 SCENARIOS: Dict[str, Scenario] = {
     "readers": Scenario(
         "readers",
@@ -760,6 +881,24 @@ SCENARIOS: Dict[str, Scenario] = {
         _setup_durability, _durability_program,
         env_defaults={"verify_digests": True},
     ),
+    "watchers": Scenario(
+        "watchers",
+        "Subscription plane at scale: thousands of watch leases "
+        "multiplexed over gateway inboxes while pinned writers publish "
+        "append bursts; notify fan-out is per endpoint, not per watcher",
+        _setup_watchers, _watcher_program,
+        env_defaults={"page_cache_bytes": 0, "vm_replication": 2,
+                      "vm_lease_ttl": 0.05},
+    ),
+    "watchers_poll": Scenario(
+        "watchers_poll",
+        "Poll twin of the watchers scenario: the same watcher spread "
+        "learns of publications by polling get_recent per watcher — the "
+        "O(W) control-plane baseline the notify path is gated against",
+        _setup_watchers_poll, _poll_watcher_program,
+        env_defaults={"page_cache_bytes": 0, "vm_replication": 2,
+                      "vm_lease_ttl": 0.05},
+    ),
     "train_serve": Scenario(
         "train_serve",
         "Integrated train/serve loop: trainers stream corpus shards, the "
@@ -770,6 +909,82 @@ SCENARIOS: Dict[str, Scenario] = {
         env_defaults={"dedup": True},
     ),
 }
+
+
+# ---------------------------------------------------------------------------
+# Failure injection
+# ---------------------------------------------------------------------------
+
+
+def parse_failure_target(target: str) -> Tuple[str, object]:
+    """Parse a chaos target spec into ``(kind, arg)``.
+
+    ``"vm-leader:<idx>"`` -> ``("vm-leader", idx)`` — down the replicated
+    version-manager leader of the idx-th setup blob's lineage;
+    ``"corrupt:<provider>"`` -> ``("corrupt", provider)`` — flip bytes of
+    that provider's first stored page behind its back; any other
+    non-empty string -> ``("kill", target)`` — a data provider to down.
+    Malformed specs raise ``ValueError`` (so ``run_scenario`` rejects
+    them up front, before any virtual time has elapsed).
+    """
+    if not target:
+        raise ValueError("empty failure target")
+    if target.startswith("vm-leader:"):
+        raw = target.split(":", 1)[1]
+        try:
+            idx = int(raw)
+        except ValueError:
+            raise ValueError(
+                f"vm-leader index must be an integer, got {raw!r}"
+            ) from None
+        if idx < 0:
+            raise ValueError(f"vm-leader index must be >= 0, got {idx}")
+        return "vm-leader", idx
+    if target.startswith("corrupt:"):
+        prov = target.split(":", 1)[1]
+        if not prov:
+            raise ValueError("corrupt target names no provider")
+        return "corrupt", prov
+    return "kill", target
+
+
+def apply_failure_target(svc: BlobSeerService, state: Dict[str, object],
+                         target: str) -> str:
+    """Fire one parsed chaos target against a live deployment.
+
+    Targets resolve at fire time: "vm-leader:<idx>" downs the
+    replicated VM leader of the idx-th setup blob's lineage (HA
+    failover path); "corrupt:<prov>" flips bytes of that provider's
+    first stored page behind its back (bitrot — the digest recorded at
+    put time is left alone, so only a scrub probe can detect it);
+    anything else is a data provider to kill.  Returns the endpoint (or
+    spec) that was hit.
+    """
+    kind, arg = parse_failure_target(target)
+    if kind == "vm-leader":
+        blobs = state.get("blobs")
+        if not blobs:
+            raise ValueError(
+                "vm-leader target needs setup blobs in env.state['blobs']")
+        if arg >= len(blobs):  # type: ignore[operator]
+            raise ValueError(
+                f"vm-leader index {arg} out of range "
+                f"(setup created {len(blobs)} blobs)")  # type: ignore[arg-type]
+        return svc.kill_vm_leader(blobs[arg])  # type: ignore[index]
+    if kind == "corrupt":
+        prov = svc.pm.get(arg)
+        victims = sorted(prov.store.iter_pids())
+        if victims:
+            vic = victims[0]
+            payload = prov.store.get(vic)
+            # mutate the raw store, NOT through delete_pages /
+            # put_pages — silent corruption leaves bookkeeping
+            # (digests, timestamps) untouched
+            prov.store.delete(vic)
+            prov.store.put(vic, bytes([payload[0] ^ 0xFF]) + payload[1:])
+        return target
+    svc.kill_provider(arg)
+    return target
 
 
 # ---------------------------------------------------------------------------
@@ -839,33 +1054,12 @@ def run_scenario(
     for i in range(n_clients):
         sim.spawn(spec.program(env, i), name=f"{scenario}-{i:03d}")
     for t, target in failures:
+        parse_failure_target(target)  # reject malformed specs up front
         def chaos(target=target):
-            # Targets resolve at fire time: "vm-leader:<idx>" downs the
-            # replicated VM leader of the idx-th setup blob's lineage
-            # (HA failover path); "corrupt:<prov>" flips bytes of that
-            # provider's first stored page behind its back (bitrot —
-            # the digest recorded at put time is left alone, so only a
-            # scrub probe can detect it); anything else is a data
-            # provider to kill.
-            if target.startswith("vm-leader:"):
-                idx = int(target.split(":", 1)[1])
-                killed = svc.kill_vm_leader(env.state["blobs"][idx])
-            elif target.startswith("corrupt:"):
-                prov = svc.pm.get(target.split(":", 1)[1])
-                victims = sorted(prov.store.iter_pids())
-                if victims:
-                    vic = victims[0]
-                    payload = prov.store.get(vic)
-                    # mutate the raw store, NOT through delete_pages /
-                    # put_pages — silent corruption leaves bookkeeping
-                    # (digests, timestamps) untouched
-                    prov.store.delete(vic)
-                    prov.store.put(
-                        vic, bytes([payload[0] ^ 0xFF]) + payload[1:])
-                killed = target
-            else:
-                svc.kill_provider(target)
-                killed = target
+            # Targets resolve at FIRE time (see apply_failure_target):
+            # the leader a "vm-leader:<idx>" spec downs is whoever holds
+            # the lineage lease at that virtual instant.
+            killed = apply_failure_target(svc, env.state, target)
             return {"ops": 0, "bytes": 0, "killed": killed}
         sim.spawn_at(t, chaos, name=f"chaos-{target}")
 

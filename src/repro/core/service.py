@@ -14,7 +14,7 @@ import time
 from typing import Dict, List, Optional
 
 from repro.core.blob import BlobClient
-from repro.core.cache import PageCache
+from repro.core.cache import InvalidationSubscriber, PageCache
 from repro.core.dedup_index import DedupIndex
 from repro.core.dht import MetadataDHT
 from repro.core.provider import DataProvider, ProviderManager
@@ -117,6 +117,11 @@ class BlobSeerService:
         )
         # GC/cache coherence: evict a retired version's pages at
         # retire-intent time (epoch bump), before any sweep delete.
+        # Delivery is push-modelled: the retiring leader ships one
+        # batched fire-and-forget invalidation event to the cache's
+        # subscriber endpoint (see InvalidationSubscriber).
+        self.cache_invalidation = InvalidationSubscriber(
+            self.page_cache, self.wire)
         self.vm.add_gc_listener(self._on_retire_intent)
         self.read_prefetch_pages = read_prefetch_pages
         self.io_workers = io_workers
@@ -208,8 +213,11 @@ class BlobSeerService:
         (``ProviderManager.delete_pages`` invalidates before any delete
         RPC); this one closes the intent-to-sweep window early and
         keeps the cache from holding data of versions that already
-        answer ``RetiredVersion``."""
-        self.page_cache.invalidate_pages(page_ids)
+        answer ``RetiredVersion``.  Delivery goes through the
+        wire-accounted push subscriber (one batched fire-and-forget
+        invalidation event per intent — see
+        :class:`~repro.core.cache.InvalidationSubscriber`)."""
+        self.cache_invalidation(blob_id, versions, epoch, page_ids)
 
     # -------------------------------------------------------- failure injection
     def kill_provider(self, pid: str) -> None:
@@ -462,6 +470,10 @@ class BlobSeerService:
              lambda: self.page_cache.reset_counters()),
             ("dedup_", lambda: self.dedup_index.rpc_counters(),
              lambda: self.dedup_index.reset_rpc_counters()),
+            ("watch_", lambda: self.vm.watch_counters(),
+             lambda: self.vm.reset_watch_counters()),
+            ("cache_push_", lambda: self.cache_invalidation.counters(),
+             lambda: self.cache_invalidation.reset_counters()),
             ("monitor_", lambda: {"errors": self._monitor_errors},
              lambda: setattr(self, "_monitor_errors", 0)),
         ]

@@ -68,6 +68,19 @@ VM_COMPLETE_CMD_BYTES = 48  # one command inside metadata_complete_many
 VM_WAL_REC_BYTES = 112     # one replicated journal record in a stream batch
 VM_WAL_PROMOTE_BYTES = 64  # the lease-takeover promotion handshake RPC
 
+# Wire-cost model of the subscription plane (watch/notify version
+# leases).  Watch registration/renewal/cancel are singleton control
+# verbs on the lineage leader.  Notification fan-out is the inverted
+# primitive: at publication time the leader coalesces every watcher's
+# pending gap into ONE entry and ships all entries bound for the same
+# inbox endpoint as ONE fire-and-forget `transfer_batch` — a burst of K
+# publications to W watchers costs O(K x endpoints-with-watchers)
+# round trips, never O(W).  Push-based page-cache invalidation rides
+# the same shape: one batched fire-and-forget send per retire intent.
+VM_WATCH_REQ_BYTES = 64      # one watch/unwatch/renew control verb
+WATCH_NOTIFY_EVT_BYTES = 32  # one coalesced per-watcher entry in a notify batch
+CACHE_INVAL_EVT_BYTES = 24   # one page-id entry in a push-invalidation batch
+
 # Wire-cost model of the dedup index (``core/dedup_index.py``).  The
 # lookup is the one blocking control round trip the handshake adds per
 # write burst: all of a burst's digests ride ONE `transfer_batch`, per

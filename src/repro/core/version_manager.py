@@ -62,6 +62,17 @@ HA control plane (``replication > 0``; see ARCHITECTURE.md):
   journal with exactly the rules :meth:`VersionManager.recover_from_wal`
   applies to the on-disk WAL.  Publication acks barrier on the stream's
   completion instant, so an acked publication is never lost to failover.
+
+Subscription plane (watch/notify; see docs/watch.md):
+
+* :meth:`VersionManager.watch` leases a push subscription on a blob —
+  publications past ``from_version`` are coalesced per watcher and
+  shipped as ONE fire-and-forget batch per inbox endpoint at
+  publication time, so a K-publication burst to W watchers costs
+  O(K x endpoints-with-watchers) notify RPCs, never O(W).  Leases use
+  the GC pin-lease clock machinery (absolute expiry, renewal) and
+  replicate through the journal, so watches survive leader failover;
+  a cold restart drops them (clients re-watch), like pins.
 """
 
 from __future__ import annotations
@@ -82,6 +93,8 @@ from repro.core.transport import (
     VM_CTRL_MSG_BYTES,
     VM_WAL_PROMOTE_BYTES,
     VM_WAL_REC_BYTES,
+    VM_WATCH_REQ_BYTES,
+    WATCH_NOTIFY_EVT_BYTES,
     EndpointDown,
     Wire,
 )
@@ -159,6 +172,26 @@ class PinLease:
     version: int
     client: Optional[str]
     expires_at: Optional[float]  # None = until released
+
+
+@dataclass
+class WatchLease:
+    """One client's watch on a blob: every publication past
+    ``from_version`` is pushed (coalesced) to the lease's inbox
+    endpoint until :meth:`VersionManager.unwatch` or the clock-based
+    expiry passes — the same absolute-expiry/renewal machinery as
+    :class:`PinLease`.  ``delivered_up_to`` is the per-watcher
+    coalescing watermark: a flush sends one entry covering
+    ``(delivered_up_to, published]`` and advances it, so deliveries
+    are monotone and never skip a version past ``from_version``."""
+
+    watch_id: str
+    blob_id: str
+    client: Optional[str]
+    endpoint: str                # inbox endpoint notifies are shipped to
+    from_version: int
+    delivered_up_to: int
+    expires_at: Optional[float]  # None = until unwatched
 
 
 @dataclass
@@ -250,7 +283,7 @@ plan_retirement` run under a single shard lock.
     """
 
     __slots__ = ("lineage_id", "lock", "cond", "blobs", "active_reads",
-                 "repl")
+                 "repl", "watches")
 
     def __init__(self, lineage_id: str, clock: Clock) -> None:
         self.lineage_id = lineage_id
@@ -266,6 +299,10 @@ plan_retirement` run under a single shard lock.
         # HA replication group (None with replication off: every verb
         # then charges the shared VMGR_ENDPOINT exactly as before)
         self.repl: Optional[_ShardReplication] = None
+        # subscription plane: blob id -> {watch id -> WatchLease},
+        # mutated under the shard lock, rebuilt on failover from the
+        # replicated journal's watch/unwatch/renew/notify records
+        self.watches: Dict[str, Dict[str, WatchLease]] = {}
 
 
 class VersionManager:
@@ -326,6 +363,18 @@ class VersionManager:
         self._pins_lock = threading.Lock()
         self._pins: Dict[str, PinLease] = {}
         self._pin_ids = itertools.count(1)
+        # Subscription plane: watch leases live on their lineage shard
+        # (sh.watches, under the shard lock, replicated via the
+        # journal).  The facade keeps only the routing map (watch id ->
+        # blob id), the id counter, and the registered delivery inboxes.
+        # Inboxes are process memory: they survive leader failover (the
+        # promoted leader keeps pushing to the same endpoints) but die
+        # with the manager process — after a cold restart clients
+        # re-watch, exactly like pin leases.
+        self._watches_lock = threading.Lock()
+        self._watch_of: Dict[str, str] = {}
+        self._watch_ids = itertools.count(1)
+        self._inboxes: Dict[str, object] = {}
         # Retire-intent listeners (gc_epoch notifications): fired after
         # every plan_retirement that retires something, OUTSIDE the
         # shard lock, with (blob_id, versions, epoch, page_ids).  The
@@ -347,16 +396,30 @@ class VersionManager:
             "wal_fsyncs": 0,
             "failovers": 0,
         }
+        # watch_* counter family (service.rpc_report): registration
+        # traffic plus notify fan-out accounting — notify_rpcs is the
+        # number the bench gate compares against the poll twin.
+        self._watch_ctr: Dict[str, int] = {
+            "registered": 0,
+            "renewed": 0,
+            "unwatched": 0,
+            "expired": 0,
+            "notify_rpcs": 0,      # fire-and-forget batches shipped
+            "notify_entries": 0,   # coalesced per-watcher entries in them
+            "notify_versions": 0,  # versions those entries covered
+            "dropped_sends": 0,    # batches lost to a down inbox endpoint
+        }
 
     # ------------------------------------------------------------------ utils
-    def _charge(self, client: Optional[str], sh: Optional[LineageShard] = None) -> None:
+    def _charge(self, client: Optional[str], sh: Optional[LineageShard] = None,
+                nbytes: int = _CTRL_MSG_BYTES) -> None:
         """Account one singleton control-plane verb (routed to the
         lineage's leader endpoint when the shard is replicated)."""
         with self._ctr_lock:
             self._counters["ops"] += 1
             self._counters["round_trips"] += 1
         self._charge_wire(sh, lambda ep: self.wire.transfer(
-            ep, _CTRL_MSG_BYTES, inbound=True, peer=client))
+            ep, nbytes, inbound=True, peer=client))
 
     def _charge_batch(self, n_items: int, item_bytes: int, kind: str,
                       client: Optional[str],
@@ -425,6 +488,21 @@ class VersionManager:
         with self._ctr_lock:
             for k in self._counters:
                 self._counters[k] = 0
+
+    def watch_counters(self) -> Dict[str, int]:
+        """Subscription-plane accounting (``watch_*`` in
+        ``service.rpc_report()``): lease traffic plus notify fan-out —
+        ``notify_rpcs`` counts fire-and-forget batches (one per inbox
+        endpoint per flush), ``notify_entries`` the coalesced
+        per-watcher entries they carried, ``notify_versions`` the
+        versions those entries covered."""
+        with self._ctr_lock:
+            return dict(self._watch_ctr)
+
+    def reset_watch_counters(self) -> None:
+        with self._ctr_lock:
+            for k in self._watch_ctr:
+                self._watch_ctr[k] = 0
 
     def _journal(self, sh: LineageShard, rec: dict) -> None:
         """Append one WAL record (stamped with its lineage id).
@@ -567,10 +645,13 @@ class VersionManager:
                            key=lambda f: (len(f.records), f.endpoint))
             self.wire.transfer(promoted.endpoint, VM_WAL_PROMOTE_BYTES,
                                inbound=True)
-            blobs, pins, keys = self.replay_lineage(promoted.records)
+            blobs, pins, keys, watches = self.replay_lineage(promoted.records)
             with sh.cond:
                 old_blobs = set(sh.blobs)
+                old_watch_ids = [wid for table in sh.watches.values()
+                                 for wid in table]
                 sh.blobs = blobs
+                sh.watches = watches
                 repl.followers = tuple(f for f in repl.followers
                                        if f is not promoted)
                 repl.leader_ep = promoted.endpoint
@@ -582,8 +663,20 @@ class VersionManager:
                                 if p.blob_id in old_blobs]:
                         del self._pins[lid]
                     self._pins.update(pins)
+                with self._watches_lock:
+                    for wid in old_watch_ids:
+                        self._watch_of.pop(wid, None)
+                    for bid, table in watches.items():
+                        for wid in table:
+                            self._watch_of[wid] = bid
                 self._journal(sh, {"op": "failover", "epoch": repl.epoch,
                                    "leader": promoted.endpoint})
+                # resume deliveries: any publication the old leader
+                # acked but whose notify record never reached this
+                # follower re-flushes now — the inbox watermark drops
+                # what was already delivered (no gap, no duplicate)
+                for bid in sorted(sh.watches):
+                    self._flush_watch_locked(sh, bid)
                 self._repl_flush(sh)
                 sh.cond.notify_all()
             with self._ctr_lock:
@@ -1063,6 +1156,7 @@ class VersionManager:
         self._charge(client, sh)
         with sh.cond:
             self._complete_locked(sh, blob_id, version)
+            self._flush_watch_locked(sh, blob_id)
             self._repl_flush(sh)
             sh.cond.notify_all()
         self._repl_barrier(sh)
@@ -1098,6 +1192,11 @@ class VersionManager:
             with sh.cond:
                 for blob_id, version in groups[lid]:
                     self._complete_locked(sh, blob_id, version)
+                # notify AFTER the whole lineage group published: a
+                # K-item burst on one blob is ONE flush — one coalesced
+                # entry per watcher, one RPC per inbox endpoint
+                for bid in sorted({b for b, _ in groups[lid]}):
+                    self._flush_watch_locked(sh, bid)
                 self._repl_flush(sh)
                 sh.cond.notify_all()
         for lid in sorted(groups):
@@ -1205,6 +1304,196 @@ class VersionManager:
             if sh.repl is None:
                 return []
             return list(sh.repl.followers[index].records)
+
+    # ------------------------------------------- subscription plane: watch
+    def register_inbox(self, inbox) -> None:
+        """Register a delivery inbox (anything with ``.endpoint`` and
+        ``.deliver(entries, ready_at=...)``) as a notify target.
+        Inboxes are process memory: they survive leader failover (the
+        promoted leader keeps pushing to the same endpoints) but die
+        with the manager process — after a cold restart clients
+        re-watch and re-register."""
+        with self._watches_lock:
+            self._inboxes[inbox.endpoint] = inbox
+
+    def watch(self, blob_id: str, from_version: int = 0, *,
+              endpoint: str, client: Optional[str] = None,
+              ttl: Optional[float] = None) -> str:
+        """WATCH: lease a push subscription on ``blob_id``.
+
+        Every publication with version ``> from_version`` is delivered
+        to ``endpoint`` (see :meth:`register_inbox`), coalesced per
+        watcher — versions already published at registration time are
+        caught up immediately in one entry.  ``ttl`` arms the same
+        absolute-clock expiry as GC pin leases (renewable via
+        :meth:`renew_watch`; ``None`` = until :meth:`unwatch`).  The
+        lease replicates through the lineage journal, so it survives
+        leader failover; retired versions are skipped (a watcher never
+        receives a version its own poll could not read), but the
+        watermark still advances past them.  Returns the lease id."""
+        if from_version < 0:
+            raise ValueError("from_version must be >= 0")
+        sh = self._shard_of(blob_id)
+        self._charge(client, sh, nbytes=VM_WATCH_REQ_BYTES)
+        with sh.cond:
+            self._blob_in(sh, blob_id)
+            with self._watches_lock:
+                wid = f"watch-{next(self._watch_ids):08d}"
+                self._watch_of[wid] = blob_id
+            expires = None if ttl is None else self._clock.now() + ttl
+            lease = WatchLease(wid, blob_id, client, endpoint,
+                               from_version, from_version, expires)
+            sh.watches.setdefault(blob_id, {})[wid] = lease
+            self._journal(sh, {"op": "watch", "blob": blob_id,
+                               "watch": wid, "from": from_version,
+                               "endpoint": endpoint, "client": client,
+                               "expires": expires})
+            # catch-up delivery: anything already published past
+            # from_version goes out now, as one coalesced entry
+            self._flush_watch_locked(sh, blob_id)
+            self._repl_flush(sh)
+        with self._ctr_lock:
+            self._watch_ctr["registered"] += 1
+        self._repl_barrier(sh)
+        return wid
+
+    def unwatch(self, watch_id: str, client: Optional[str] = None) -> None:
+        """Cancel a watch lease (idempotent: unknown/expired ids are
+        no-ops, like :meth:`unpin`); nothing is delivered afterward."""
+        with self._watches_lock:
+            blob_id = self._watch_of.get(watch_id)
+        if blob_id is None:
+            self._charge(client, nbytes=VM_WATCH_REQ_BYTES)
+            return
+        sh = self._shard_of(blob_id)
+        self._charge(client, sh, nbytes=VM_WATCH_REQ_BYTES)
+        with sh.lock:
+            if sh.watches.get(blob_id, {}).pop(watch_id, None) is None:
+                return
+            with self._watches_lock:
+                self._watch_of.pop(watch_id, None)
+            self._journal(sh, {"op": "unwatch", "watch": watch_id,
+                               "blob": blob_id})
+            self._repl_flush(sh)
+        with self._ctr_lock:
+            self._watch_ctr["unwatched"] += 1
+
+    def renew_watch(self, watch_id: str, ttl: Optional[float],
+                    client: Optional[str] = None) -> None:
+        """Extend (or make permanent, ``ttl=None``) a watch lease's
+        expiry — the pin-lease renewal rule on the watch table.  Raises
+        ``KeyError`` for unknown/already-expired leases."""
+        with self._watches_lock:
+            blob_id = self._watch_of.get(watch_id)
+        if blob_id is None:
+            raise KeyError(f"unknown watch lease {watch_id!r}")
+        sh = self._shard_of(blob_id)
+        self._charge(client, sh, nbytes=VM_WATCH_REQ_BYTES)
+        with sh.lock:
+            lease = sh.watches.get(blob_id, {}).get(watch_id)
+            if lease is None:
+                raise KeyError(f"unknown watch lease {watch_id!r}")
+            lease.expires_at = (None if ttl is None
+                                else self._clock.now() + ttl)
+            self._journal(sh, {"op": "watch_renew", "watch": watch_id,
+                               "blob": blob_id,
+                               "expires": lease.expires_at})
+            self._repl_flush(sh)
+        with self._ctr_lock:
+            self._watch_ctr["renewed"] += 1
+
+    def watch_report(self, blob_id: str) -> List[WatchLease]:
+        """Current watch leases on ``blob_id`` (tests and operators)."""
+        sh = self._shard_of(blob_id)
+        with sh.lock:
+            return list(sh.watches.get(blob_id, {}).values())
+
+    def _flush_watch_locked(self, sh: LineageShard, blob_id: str) -> None:
+        """Coalesce and push the pending publication gap of every live
+        watcher of ``blob_id``; caller holds the shard lock (runs at
+        publication, at registration catch-up and after failover
+        replay).
+
+        Per flush each watcher costs ONE coalesced entry covering its
+        whole ``(delivered_up_to, published]`` gap, and all entries
+        bound for the same inbox endpoint ride ONE fire-and-forget
+        batch — a K-publication burst pays O(endpoints-with-watchers)
+        notify RPCs, independent of the watcher count.  Expired leases
+        are pruned here (nothing is sent to them); retired versions are
+        filtered out but the watermark still advances past them."""
+        table = sh.watches.get(blob_id)
+        if not table:
+            return
+        b = self._blob_in(sh, blob_id)
+        pub = b.published
+        now = self._clock.now()
+        expired = [wid for wid, lease in table.items()
+                   if lease.expires_at is not None and lease.expires_at < now]
+        if expired:
+            for wid in expired:
+                del table[wid]
+            with self._watches_lock:
+                for wid in expired:
+                    self._watch_of.pop(wid, None)
+            with self._ctr_lock:
+                self._watch_ctr["expired"] += len(expired)
+        by_ep: Dict[str, List[Tuple[str, Tuple[int, ...]]]] = {}
+        advanced = False
+        for wid in sorted(table):       # sorted: deterministic fan-out
+            lease = table[wid]
+            if lease.delivered_up_to >= pub:
+                continue
+            versions = tuple(
+                v for v in range(lease.delivered_up_to + 1, pub + 1)
+                if v not in self._owner_record(sh, blob_id, v).retired)
+            lease.delivered_up_to = pub
+            advanced = True
+            if versions:
+                by_ep.setdefault(lease.endpoint, []).append((wid, versions))
+        if by_ep:
+            self._send_notify(sh, blob_id, by_ep)
+        if advanced:
+            # coarse per-blob watermark record: replay raises every
+            # lease registered before it to pub (see replay_lineage),
+            # which is what lets a promoted follower resume deliveries
+            # with no gap (stale watermark -> re-flush; the inbox
+            # watermark dedups) and no duplicate
+            self._journal(sh, {"op": "notify", "blob": blob_id, "v": pub})
+
+    def _send_notify(self, sh: LineageShard, blob_id: str,
+                     by_ep: Dict[str, List[Tuple[str, Tuple[int, ...]]]]) -> None:
+        """Ship one batched fire-and-forget notify per inbox endpoint
+        (the PR 4/5 primitive: charged on the receiving endpoint, never
+        blocks the publishing verb — safe under the shard lock).  A
+        down endpoint drops its batch: at-most-once to dead inboxes;
+        the lease still advances and eventually expires via its ttl."""
+        repl = sh.repl
+        leader = repl.leader_ep if repl is not None else VMGR_ENDPOINT
+        rpcs = entries = nvers = dropped = 0
+        for ep in sorted(by_ep):
+            batch = by_ep[ep]
+            done_at = 0.0
+            if self.wire is not None:
+                try:
+                    done_at = self.wire.transfer_batch(
+                        ep, [WATCH_NOTIFY_EVT_BYTES] * len(batch),
+                        inbound=True, peer=leader, fire_and_forget=True)
+                except EndpointDown:
+                    dropped += len(batch)
+                    continue
+            rpcs += 1
+            entries += len(batch)
+            nvers += sum(len(vs) for _, vs in batch)
+            with self._watches_lock:
+                inbox = self._inboxes.get(ep)
+            if inbox is not None:
+                inbox.deliver([(wid, blob_id, vs) for wid, vs in batch],
+                              ready_at=done_at)
+        with self._ctr_lock:
+            self._watch_ctr["notify_rpcs"] += rpcs
+            self._watch_ctr["notify_entries"] += entries
+            self._watch_ctr["notify_versions"] += nvers
+            self._watch_ctr["dropped_sends"] += dropped
 
     # ------------------------------------------------ GC: pins + read leases
     def pin(self, blob_id: str, version: int, client: Optional[str] = None,
@@ -1684,18 +1973,29 @@ class VersionManager:
 
     def replay_lineage(
         self, records: Sequence[dict],
-    ) -> Tuple[Dict[str, BlobRecord], Dict[str, PinLease], Dict[str, Tuple[str, int]]]:
+    ) -> Tuple[Dict[str, BlobRecord], Dict[str, PinLease],
+               Dict[str, Tuple[str, int]], Dict[str, Dict[str, WatchLease]]]:
         """Rebuild one lineage's state from a journal prefix: the blob
-        records, the still-unexpired pin leases and the assign
-        idempotency keys.  This is what failover runs on the promoted
-        follower's journal; the follower-replay equivalence property
-        test replays arbitrary prefixes through it and compares against
-        the leader.  Records must be a *prefix* of one lineage's journal
-        (the order its shard lock serialized)."""
+        records, the still-unexpired pin leases, the assign idempotency
+        keys and the watch-lease tables.  This is what failover runs on
+        the promoted follower's journal; the follower-replay
+        equivalence property test replays arbitrary prefixes through it
+        and compares against the leader.  Records must be a *prefix* of
+        one lineage's journal (the order its shard lock serialized).
+
+        Watch rules: a ``watch`` record opens the lease at its
+        ``from`` watermark; each ``notify`` record raises every lease
+        of its blob registered before it to the journaled publication
+        watermark — so a promoted leader's ``delivered_up_to`` is
+        exactly what the old leader last journaled, and its first
+        post-failover flush re-covers at most the un-journaled tail
+        (the inbox watermark drops the overlap).  Expired leases are
+        pruned once at the end (renewals may extend mid-journal)."""
         now = self._clock.now()
         blobs: Dict[str, BlobRecord] = {}
         pins: Dict[str, PinLease] = {}
         keys: Dict[str, Tuple[str, int]] = {}
+        watches: Dict[str, Dict[str, WatchLease]] = {}
         for rec in records:
             op = rec["op"]
             if op == "create":
@@ -1717,6 +2017,21 @@ class VersionManager:
                                                   exp)
             elif op == "unpin":
                 pins.pop(rec["lease"], None)
+            elif op == "watch":
+                watches.setdefault(rec["blob"], {})[rec["watch"]] = WatchLease(
+                    rec["watch"], rec["blob"], rec.get("client"),
+                    rec["endpoint"], rec["from"], rec["from"],
+                    rec["expires"])
+            elif op == "unwatch":
+                watches.get(rec["blob"], {}).pop(rec["watch"], None)
+            elif op == "watch_renew":
+                lease = watches.get(rec["blob"], {}).get(rec["watch"])
+                if lease is not None:
+                    lease.expires_at = rec["expires"]
+            elif op == "notify":
+                for lease in watches.get(rec["blob"], {}).values():
+                    if lease.delivered_up_to < rec["v"]:
+                        lease.delivered_up_to = rec["v"]
             elif op == "failover":
                 pass   # audit record: carries no state
             else:
@@ -1724,7 +2039,12 @@ class VersionManager:
                 self._apply_blob_op(b, rec, now)
                 if op == "assign" and rec.get("key") is not None:
                     keys[rec["key"]] = (rec["blob"], rec["v"])
-        return blobs, pins, keys
+        for table in watches.values():
+            for wid in [w for w, lease in table.items()
+                        if lease.expires_at is not None
+                        and lease.expires_at < now]:
+                del table[wid]
+        return blobs, pins, keys, watches
 
     @classmethod
     def recover_from_wal(cls, wal_path: str, wire: Optional[Wire] = None, *,
@@ -1780,8 +2100,12 @@ class VersionManager:
                     vm._lineage_of[rec["blob"]] = lid
                     vm._blob_order.append(rec["blob"])
                     max_id = max(max_id, int(rec["blob"].split("-")[1]))
-                elif op in ("pin", "unpin", "failover"):
-                    pass   # soft state: a restarted manager drops leases
+                elif op in ("pin", "unpin", "failover",
+                            "watch", "unwatch", "watch_renew", "notify"):
+                    # soft state: a restarted manager drops pin AND
+                    # watch leases (inboxes are process memory —
+                    # clients re-watch after a cold restart)
+                    pass
                 else:
                     vm._apply_blob_op(blob_rec(rec["blob"]), rec, vm._clock.now())
         vm._ids = itertools.count(max_id + 1)

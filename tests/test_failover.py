@@ -103,7 +103,7 @@ def test_follower_replay_equivalence_property():
 
     def step_and_check():
         follower = vm.follower_records(bid, 0)
-        blobs, _pins, _keys = vm.replay_lineage(follower)
+        blobs, _pins, _keys, _watches = vm.replay_lineage(follower)
         assert _digest_of_blobs(blobs) == _lineage_digest(vm, bid)
 
     step_and_check()
@@ -119,7 +119,7 @@ def test_follower_replay_equivalence_property():
     step_and_check()
     fork = vm.branch(bid, 2, "w")
     step_and_check()
-    blobs, _, _ = vm.replay_lineage(vm.follower_records(bid, 0))
+    blobs, _, _, _ = vm.replay_lineage(vm.follower_records(bid, 0))
     assert fork in blobs and blobs[fork].parent == (bid, 2)
 
 

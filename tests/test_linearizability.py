@@ -12,7 +12,14 @@ assigned versions (the paper's §4.3 total-ordering claim):
   backwards) and never returns a version from the future (one whose
   update had not even been invoked when the get responded),
 * every returned recent version is fully readable (atomicity: the
-  snapshot resolves completely).
+  snapshot resolves completely),
+* NOTIFY deliveries (the subscription plane) are causal and ordered:
+  a delivered version's update was invoked before the delivery
+  responded, each watcher's delivery stream is strictly monotone (no
+  duplicate, no regression), nothing at or below the watch's
+  ``from_version`` floor is delivered, and a watcher's own poll after
+  a delivery responded observes at least the delivered version (push
+  never outruns what poll could see).
 
 Virtual timestamps come from ``Simulator.now()``, so the intervals are
 exact — no wall-clock jitter — and every counterexample is replayable
@@ -31,9 +38,11 @@ from repro.core import BlobSeerService, Simulator, Wire
 class Op:
     client: str
     kind: str            # "append" | "write" | "get_recent"
+    #                    # | "watch" | "deliver"
     invoke: float
     respond: float
-    result: int          # version assigned / version observed
+    result: int          # version assigned / observed / delivered;
+    #                    # for "watch": the from_version floor
     size: int = 0
 
 
@@ -73,9 +82,52 @@ def check_history(hist: List[Op]) -> None:
                 f"observed v{g.result} before its update was invoked"
             )
 
+    # NOTIFY: a delivered version was published before the delivery —
+    # its update must at least have been invoked by the respond instant
+    delivers = [op for op in hist if op.kind == "deliver"]
+    for d in delivers:
+        u = assigned.get(d.result)
+        assert u is not None, f"delivered unassigned version {d.result}"
+        assert u.invoke <= d.respond, (
+            f"{d.client} was notified of v{d.result} before its update "
+            f"was invoked"
+        )
+
+    # NOTIFY: per-watcher delivery order is strictly monotone — a
+    # later delivery carries a strictly larger version (no duplicate,
+    # no regression)
+    for a in delivers:
+        for b in delivers:
+            if a.client == b.client and a.respond < b.invoke:
+                assert a.result < b.result, (
+                    f"{a.client} delivery went backwards or repeated: "
+                    f"v{a.result} then v{b.result}"
+                )
+
+    # NOTIFY: nothing at or below the watch's from_version floor
+    floors = {op.client: op for op in hist if op.kind == "watch"}
+    for d in delivers:
+        w = floors.get(d.client)
+        if w is not None:
+            assert d.result > w.result, (
+                f"{d.client} delivered v{d.result} at or below its "
+                f"watch floor v{w.result}"
+            )
+
+    # NOTIFY vs poll: once a delivery of v responded, the watcher's own
+    # later GET_RECENT must observe at least v — push never claims a
+    # version the watcher's poll could not yet see
+    for d in delivers:
+        for g in gets:
+            if g.client == d.client and d.respond < g.invoke:
+                assert g.result >= d.result, (
+                    f"{d.client} poll lagged push: delivered v{d.result} "
+                    f"but a later get_recent returned v{g.result}"
+                )
+
 
 def _run_history(seed: int, n_updaters: int = 24, n_observers: int = 8,
-                 ops_each: int = 3) -> List[Op]:
+                 ops_each: int = 3, n_watchers: int = 4) -> List[Op]:
     sim = Simulator(seed=seed)
     svc = BlobSeerService(n_providers=6, n_meta_shards=3,
                           wire=Wire(clock=sim))
@@ -111,10 +163,29 @@ def _run_history(seed: int, n_updaters: int = 24, n_observers: int = 8,
                     assert len(c.read(bid, v, 0, size)) == size
         return prog
 
+    def watcher(i):
+        def prog():
+            c = svc.client(f"n{i:03d}")
+            inv = sim.now()
+            wid = c.watch(bid, from_version=0)
+            hist.append(Op(f"n{i:03d}", "watch", inv, sim.now(), 0))
+            for _ in range(ops_each * 6):
+                sim.sleep(0.002)
+                inv = sim.now()
+                for v in c.poll_notifications(wid):
+                    hist.append(Op(f"n{i:03d}", "deliver", inv, sim.now(), v))
+                inv = sim.now()
+                g = c.get_recent(bid)
+                hist.append(Op(f"n{i:03d}", "get_recent", inv, sim.now(), g))
+            c.unwatch(wid)
+        return prog
+
     for i in range(n_updaters):
         sim.spawn(updater(i), name=f"u{i:03d}")
     for i in range(n_observers):
         sim.spawn(observer(i), name=f"o{i:03d}")
+    for i in range(n_watchers):
+        sim.spawn(watcher(i), name=f"n{i:03d}")
     sim.run()
     # drop the setup append from the contiguity check's expectations by
     # folding it in as an update that happened before everything
@@ -154,4 +225,66 @@ def test_checker_rejects_nonmonotone_get_recent():
         Op("o2", "get_recent", 2.0, 2.1, 1),  # goes backwards
     ]
     with pytest.raises(AssertionError, match="backwards"):
+        check_history(bad)
+
+
+def test_checker_rejects_delivery_before_publication():
+    bad = [
+        Op("a", "append", 5.0, 6.0, 1),
+        Op("w", "deliver", 0.0, 0.5, 1),  # delivered before invoked
+    ]
+    with pytest.raises(AssertionError, match="notified of v1 before"):
+        check_history(bad)
+
+
+def test_checker_rejects_unassigned_delivery():
+    bad = [
+        Op("a", "append", 0.0, 0.1, 1),
+        Op("w", "deliver", 1.0, 1.1, 7),  # no such update
+    ]
+    with pytest.raises(AssertionError, match="delivered unassigned"):
+        check_history(bad)
+
+
+def test_checker_rejects_duplicate_delivery():
+    bad = [
+        Op("a", "append", 0.0, 0.1, 1),
+        Op("b", "append", 0.0, 0.2, 2),
+        Op("w", "deliver", 1.0, 1.1, 2),
+        Op("w", "deliver", 2.0, 2.1, 2),  # repeated
+    ]
+    with pytest.raises(AssertionError, match="backwards or repeated"):
+        check_history(bad)
+
+
+def test_checker_rejects_regressing_delivery():
+    bad = [
+        Op("a", "append", 0.0, 0.1, 1),
+        Op("b", "append", 0.0, 0.2, 2),
+        Op("w", "deliver", 1.0, 1.1, 2),
+        Op("w", "deliver", 2.0, 2.1, 1),  # went backwards
+    ]
+    with pytest.raises(AssertionError, match="backwards or repeated"):
+        check_history(bad)
+
+
+def test_checker_rejects_delivery_below_watch_floor():
+    bad = [
+        Op("a", "append", 0.0, 0.1, 1),
+        Op("b", "append", 0.0, 0.2, 2),
+        Op("w", "watch", 0.5, 0.6, 2),    # from_version=2
+        Op("w", "deliver", 1.0, 1.1, 2),  # at the floor: must be above
+    ]
+    with pytest.raises(AssertionError, match="watch floor"):
+        check_history(bad)
+
+
+def test_checker_rejects_push_ahead_of_poll():
+    bad = [
+        Op("a", "append", 0.0, 0.1, 1),
+        Op("b", "append", 0.0, 0.2, 2),
+        Op("w", "deliver", 1.0, 1.1, 2),
+        Op("w", "get_recent", 2.0, 2.1, 1),  # poll lags the push
+    ]
+    with pytest.raises(AssertionError, match="poll lagged push"):
         check_history(bad)

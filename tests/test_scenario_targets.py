@@ -1,0 +1,112 @@
+"""Failure-target parsing and application for the scenario runner.
+
+``run_scenario``'s chaos task historically inlined the target-spec
+dispatch; it now lives in ``parse_failure_target`` (pure, rejects
+malformed specs with ``ValueError``) and ``apply_failure_target``
+(fires one spec against a live deployment).  These tests pin both.
+"""
+
+import pytest
+
+from repro.core import BlobSeerService, Simulator, Wire
+from repro.core.scenarios import (
+    apply_failure_target,
+    parse_failure_target,
+    run_scenario,
+)
+
+PS = 4 * 1024
+
+
+# ------------------------------------------------------------------ parsing
+
+
+@pytest.mark.parametrize("spec,expected", [
+    ("vm-leader:0", ("vm-leader", 0)),
+    ("vm-leader:3", ("vm-leader", 3)),
+    ("corrupt:prov-0001", ("corrupt", "prov-0001")),
+    ("prov-0002", ("kill", "prov-0002")),
+    ("meta-0000", ("kill", "meta-0000")),
+])
+def test_parse_accepts_well_formed_specs(spec, expected):
+    assert parse_failure_target(spec) == expected
+
+
+@pytest.mark.parametrize("spec,msg", [
+    ("", "empty"),
+    ("vm-leader:", "integer"),
+    ("vm-leader:x", "integer"),
+    ("vm-leader:1.5", "integer"),
+    ("vm-leader:-1", ">= 0"),
+    ("corrupt:", "no provider"),
+])
+def test_parse_rejects_malformed_specs(spec, msg):
+    with pytest.raises(ValueError, match=msg):
+        parse_failure_target(spec)
+
+
+def test_run_scenario_rejects_malformed_targets_before_running():
+    with pytest.raises(ValueError, match="integer"):
+        run_scenario("appenders", 2, seed=0, ops_per_client=1,
+                     failures=[(0.001, "vm-leader:oops")])
+
+
+# -------------------------------------------------------------- application
+
+
+def _deployment(**kw):
+    sim = Simulator(seed=3)
+    kw.setdefault("n_providers", 4)
+    kw.setdefault("n_meta_shards", 2)
+    svc = BlobSeerService(wire=Wire(clock=sim), **kw)
+    return sim, svc
+
+
+def test_apply_kill_downs_the_provider_endpoint():
+    _, svc = _deployment()
+    assert apply_failure_target(svc, {}, "prov-0001") == "prov-0001"
+    assert svc.wire.is_down("prov-0001")
+    assert not svc.wire.is_down("prov-0000")
+
+
+def test_apply_corrupt_flips_a_stored_byte_silently():
+    _, svc = _deployment()
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    c.append(bid, b"\x11" * PS)
+    # find a provider actually holding a page
+    pid = next(p.pid for p in svc.pm.all_providers()
+               if sorted(p.store.iter_pids()))
+    prov = svc.pm.get(pid)
+    vic = sorted(prov.store.iter_pids())[0]
+    before = prov.store.get(vic)
+    assert apply_failure_target(svc, {}, f"corrupt:{pid}") == f"corrupt:{pid}"
+    after = prov.store.get(vic)
+    assert after[0] == before[0] ^ 0xFF and after[1:] == before[1:]
+    assert not svc.wire.is_down(pid)   # bitrot, not an outage
+
+
+def test_apply_corrupt_on_empty_provider_is_a_noop():
+    _, svc = _deployment()
+    assert apply_failure_target(svc, {}, "corrupt:prov-0003") \
+        == "corrupt:prov-0003"
+
+
+def test_apply_vm_leader_kills_the_lineage_leader():
+    _, svc = _deployment(vm_replication=2, vm_lease_ttl=0.01)
+    c = svc.client("w")
+    state = {"blobs": [c.create(psize=PS), c.create(psize=PS)]}
+    killed = apply_failure_target(svc, state, "vm-leader:1")
+    assert killed == f"vm-{state['blobs'][1]}"
+    assert svc.wire.is_down(killed)
+    assert not svc.wire.is_down(f"vm-{state['blobs'][0]}")
+
+
+def test_apply_vm_leader_requires_setup_blobs_in_state():
+    _, svc = _deployment(vm_replication=2, vm_lease_ttl=0.01)
+    with pytest.raises(ValueError, match="env.state"):
+        apply_failure_target(svc, {}, "vm-leader:0")
+    c = svc.client("w")
+    state = {"blobs": [c.create(psize=PS)]}
+    with pytest.raises(ValueError, match="out of range"):
+        apply_failure_target(svc, state, "vm-leader:1")

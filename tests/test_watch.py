@@ -1,0 +1,279 @@
+"""Subscription plane: watch/notify version leases.
+
+Unit coverage for lease registration/catch-up, per-endpoint coalescing,
+expiry/renewal, unwatch idempotence, ``wait_for_version``, the
+push-invalidation cache subscriber, and the failover regression: a
+lineage leader killed mid-burst must resume deliveries from the
+promoted follower with no gap and no duplicate.
+"""
+
+import pytest
+
+from repro.core import BlobSeerService, Simulator, Wire
+from repro.core.gc import collect_garbage
+
+PS = 4 * 1024
+
+
+def _svc(**kw):
+    kw.setdefault("n_providers", 4)
+    kw.setdefault("n_meta_shards", 2)
+    return BlobSeerService(**kw)
+
+
+# ------------------------------------------------------------- registration
+
+
+def test_watch_catches_up_from_version_zero():
+    svc = _svc()
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    for _ in range(3):
+        c.append(bid, b"x" * PS)
+    wid = c.watch(bid, from_version=0)
+    assert c.poll_notifications(wid) == [1, 2, 3]
+    assert svc.vm.watch_counters()["registered"] == 1
+
+
+def test_watch_floor_excludes_versions_at_or_below_from_version():
+    svc = _svc()
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    for _ in range(4):
+        c.append(bid, b"x" * PS)
+    wid = c.watch(bid, from_version=2)
+    assert c.poll_notifications(wid) == [3, 4]
+    with pytest.raises(ValueError):
+        c.watch(bid, from_version=-1)
+
+
+def test_watch_catch_up_skips_retired_versions():
+    svc = _svc()
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    for _ in range(4):
+        c.append(bid, b"x" * PS)
+    c.set_retention(bid, keep_last=2)
+    collect_garbage(svc, client="gc", orphan_grace=None)
+    wid = c.watch(bid, from_version=0)
+    assert c.poll_notifications(wid) == [3, 4]
+
+
+def test_watch_report_and_unknown_blob():
+    svc = _svc()
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    wid = c.watch(bid)
+    leases = svc.vm.watch_report(bid)
+    assert [lease.watch_id for lease in leases] == [wid]
+    assert leases[0].expires_at is None
+    with pytest.raises(KeyError):
+        c.watch("blob-9999")
+
+
+# --------------------------------------------------------------- coalescing
+
+
+def test_burst_coalesces_to_one_rpc_per_endpoint():
+    sim = Simulator(seed=5)
+    svc = _svc(wire=Wire(clock=sim))
+    c = svc.client("w")
+    g = svc.client("gw")
+    bid = c.create(psize=PS)
+    wids = [g.watch(bid) for _ in range(10)]
+    svc.vm.reset_watch_counters()
+
+    def writer():
+        c.append_many(bid, [b"x" * PS] * 4)
+
+    def reader():
+        sim.sleep(1.0)
+        return {w: g.poll_notifications(w) for w in wids}
+
+    sim.spawn(writer, name="writer")
+    sim.spawn(reader, name="reader")
+    sim.run()
+    delivered = sim.results()["reader"]
+    assert all(delivered[w] == [1, 2, 3, 4] for w in wids)
+    ctr = svc.vm.watch_counters()
+    # one publication flush, ONE send to the single inbox endpoint:
+    # 10 leases ride it as 10 coalesced entries covering 40 versions
+    assert ctr["notify_rpcs"] == 1
+    assert ctr["notify_entries"] == 10
+    assert ctr["notify_versions"] == 40
+    assert ctr["dropped_sends"] == 0
+
+
+def test_notify_fan_out_counts_endpoints_not_watchers():
+    sim = Simulator(seed=6)
+    svc = _svc(wire=Wire(clock=sim))
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    gws = [svc.client(f"gw{i}") for i in range(3)]
+    for g in gws:
+        for _ in range(5):
+            g.watch(bid)
+    svc.vm.reset_watch_counters()
+
+    def writer():
+        c.append(bid, b"x" * PS)
+
+    sim.spawn(writer, name="writer")
+    sim.run()
+    ctr = svc.vm.watch_counters()
+    assert ctr["notify_rpcs"] == 3        # one per gateway endpoint
+    assert ctr["notify_entries"] == 15    # one per lease
+
+
+# ------------------------------------------------------ lifecycle: lease ops
+
+
+def test_unwatch_stops_deliveries_and_is_idempotent():
+    svc = _svc()
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    c.append(bid, b"x" * PS)
+    wid = c.watch(bid)
+    assert c.poll_notifications(wid) == [1]
+    c.unwatch(wid)
+    c.append(bid, b"x" * PS)
+    assert c.poll_notifications(wid) == []
+    c.unwatch(wid)            # unknown lease: charged, not an error
+    c.unwatch("watch-none")   # never existed: same
+    assert svc.vm.watch_counters()["unwatched"] == 1
+    assert svc.vm.watch_report(bid) == []
+
+
+def test_expired_lease_receives_nothing_afterwards():
+    sim = Simulator(seed=7)
+    svc = _svc(wire=Wire(clock=sim))
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    wid_holder = {}
+
+    def prog():
+        wid = wid_holder["wid"] = c.watch(bid, ttl=0.05)
+        sim.sleep(0.2)                 # lease lapses, nothing renewed
+        c.append(bid, b"x" * PS)       # flush prunes the expired lease
+        assert c.poll_notifications(wid) == []
+
+    sim.spawn(prog, name="p")
+    sim.run()
+    ctr = svc.vm.watch_counters()
+    assert ctr["expired"] == 1
+    assert ctr["notify_entries"] == 0
+    assert svc.vm.watch_report(bid) == []
+
+
+def test_renewed_lease_outlives_its_original_ttl():
+    sim = Simulator(seed=8)
+    svc = _svc(wire=Wire(clock=sim))
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+
+    def prog():
+        wid = c.watch(bid, ttl=0.05)
+        sim.sleep(0.04)
+        c.renew_watch(wid, ttl=1.0)
+        sim.sleep(0.1)                 # past the ORIGINAL expiry
+        c.append(bid, b"x" * PS)
+        sim.sleep(0.05)
+        assert c.poll_notifications(wid) == [1]
+
+    sim.spawn(prog, name="p")
+    sim.run()
+    ctr = svc.vm.watch_counters()
+    assert ctr["renewed"] == 1 and ctr["expired"] == 0
+    with pytest.raises(KeyError):
+        c.renew_watch("watch-none", ttl=1.0)
+
+
+def test_wait_for_version_blocks_until_published():
+    sim = Simulator(seed=9)
+    svc = _svc(wire=Wire(clock=sim))
+    bid = svc.client("setup").create(psize=PS)
+
+    def writer():
+        c = svc.client("w")
+        for _ in range(3):
+            sim.sleep(0.05)
+            c.append(bid, b"x" * PS)
+
+    def waiter():
+        c = svc.client("r")
+        t0 = sim.now()
+        assert c.wait_for_version(bid, 3, timeout=600.0) == 3
+        assert sim.now() >= t0 + 0.15   # genuinely waited for the writes
+        with pytest.raises(TimeoutError):
+            c.wait_for_version(bid, 99, timeout=0.1)
+
+    sim.spawn(writer, name="w")
+    sim.spawn(waiter, name="r")
+    sim.run()
+    # the temporary leases cleaned up after themselves
+    assert svc.vm.watch_report(bid) == []
+
+
+# ----------------------------------------------------- cache push-invalidate
+
+
+def test_retirement_pushes_cache_invalidations():
+    svc = _svc(page_cache_bytes=1 << 20)
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    for _ in range(4):
+        c.append(bid, b"x" * PS)
+    c.read(bid, 2, 0, PS)   # populate the cache from an old version
+    c.set_retention(bid, keep_last=2)
+    collect_garbage(svc, client="gc", orphan_grace=None)
+    ctr = svc.cache_invalidation.counters()
+    assert ctr["pushes"] >= 1
+    assert ctr["page_ids"] >= 1
+    assert ctr["invalidated"] >= 1
+    svc.cache_invalidation.reset_counters()
+    assert svc.cache_invalidation.counters()["pushes"] == 0
+
+
+# ------------------------------------------------------- failover regression
+
+
+def test_watch_deliveries_survive_leader_failover_no_gap_no_dup():
+    """Kill the lineage leader mid-burst: the promoted follower must
+    resume notify deliveries exactly where the dead leader stopped —
+    the client-side inbox watermark absorbs any re-sent tail, so the
+    delivered stream stays ``1..final`` with no gap and no duplicate."""
+    sim = Simulator(seed=10)
+    svc = _svc(wire=Wire(clock=sim), vm_replication=2, vm_lease_ttl=0.01)
+    bid = svc.client("setup").create(psize=PS)
+    g = svc.client("gw")
+    wids = [g.watch(bid) for _ in range(5)]
+    final = 6 * 4
+
+    def writer():
+        c = svc.client("w")
+        for _ in range(6):
+            c.append_many(bid, [b"x" * PS] * 4)
+
+    def gateway():
+        out = {}
+        for wid in wids:
+            g.inbox.wait_for(wid, final, timeout=600.0)
+            out[wid] = g.poll_notifications(wid)
+        return out
+
+    def chaos():
+        svc.kill_vm_leader(bid)
+
+    sim.spawn(writer, name="writer")
+    sim.spawn(gateway, name="gateway")
+    sim.spawn_at(0.003, chaos, name="chaos")
+    sim.run()
+    assert not sim.errors()
+    assert svc.vm.rpc_counters()["failovers"] == 1
+    streams = sim.results()["gateway"]
+    for wid in wids:
+        assert streams[wid] == list(range(1, final + 1)), (
+            wid, streams[wid])
+    # the re-flush after promotion may legitimately re-send the
+    # un-journaled tail; the inbox watermark must have dropped it
+    assert g.inbox.duplicates_dropped >= 0

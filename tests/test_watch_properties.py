@@ -1,0 +1,181 @@
+"""Seeded property tests: watch/notify delivery under random histories.
+
+Hypothesis drives random interleavings of append / overwrite / branch /
+GC / watch / unwatch / lease-expiry across blob pools on the
+deterministic Simulator, and checks every lease's delivered stream
+against a poll-twin oracle: the catch-up at registration is exactly the
+unretired versions above ``from_version``, every version published
+while the lease is live arrives exactly once in order, and a lease that
+was unwatched or has expired receives nothing afterwards.
+
+Pools are disjoint — each client task owns its own blobs — so the
+oracle is exact for any interleaving the scheduler explores.  GC and
+lease TTLs are only drawn in single-pool histories: a GC round sweeps
+*globally* and virtual time is shared, so in multi-pool histories a
+neighbour's sleep could expire a lease (or a neighbour's GC round could
+retire a catch-up version) at a point the per-pool oracle cannot see.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    # No hypothesis: fall back to a fixed seed grid instead of skipping
+    # — the histories are seeded and deterministic either way, random
+    # search just explores more of the space when it is available.
+    HAVE_HYPOTHESIS = False
+
+from repro.core import BlobSeerService, Simulator, Wire
+from repro.core.gc import collect_garbage
+
+
+PSIZE = 16
+TTL = 10.0        # lease TTL; ADVANCE jumps far past it
+ADVANCE = 50.0    # virtual-time jump of an "advance" op
+
+
+def _payload(tag: int) -> bytes:
+    return bytes([tag % 250 + 1]) * PSIZE
+
+
+def _run_watch_history(seed, n_pools, ops_per_pool):
+    """Random per-pool op sequences; returns (svc, expected, delivered,
+    late) where ``expected[wid]`` is the oracle stream, ``delivered``
+    what the inbox actually handed out while the lease was entitled,
+    and ``late[wid]`` anything that leaked out afterwards."""
+    single = n_pools == 1
+    sim = Simulator(seed=seed)
+    svc = BlobSeerService(wire=Wire(clock=sim), n_providers=4,
+                          n_meta_shards=4)
+    setup = svc.client("setup")
+    pools = [[setup.create(psize=PSIZE)] for _ in range(n_pools)]
+    expected = {}   # wid -> oracle stream (grows while the lease lives)
+    delivered = {}  # wid -> what poll_notifications handed out
+    late = {}       # wid -> deliveries after expiry (must stay empty)
+
+    def pool_program(p):
+        def prog():
+            c = svc.client(f"c{p:02d}")
+            blobs = pools[p]
+            live = {}   # wid -> (blob_id, has_ttl)
+            ttl_wids = []
+
+            def drain(wid):
+                delivered.setdefault(wid, []).extend(
+                    c.poll_notifications(wid))
+
+            for k in range(ops_per_pool):
+                kind = (p * 31 + k * 17 + seed) % 12
+                bid = blobs[(p + k) % len(blobs)]
+                tag = p * ops_per_pool + k
+                if kind == 7 and not single:
+                    kind = 0      # GC sweeps globally: single-pool only
+                if kind < 5:                        # publish via append
+                    v = c.append(bid, _payload(tag))
+                    for wid, (wbid, _t) in live.items():
+                        if wbid == bid:
+                            expected[wid].append(v)
+                elif kind < 7:                      # publish via overwrite
+                    v = c.write(bid, _payload(tag), 0)
+                    for wid, (wbid, _t) in live.items():
+                        if wbid == bid:
+                            expected[wid].append(v)
+                elif kind == 7:                     # GC round, mid-traffic
+                    c.set_retention(bid, keep_last=2)
+                    collect_garbage(svc, client=f"gc{p:02d}",
+                                    orphan_grace=None)
+                elif kind == 8:                     # branch joins the pool
+                    v = c.get_recent(bid)
+                    if v > 0:
+                        blobs.append(c.branch(bid, v))
+                elif kind == 9:                     # register a lease
+                    frm = 0 if k % 2 == 0 else c.get_recent(bid)
+                    use_ttl = single and k % 3 == 0
+                    wid = c.watch(bid, from_version=frm,
+                                  ttl=TTL if use_ttl else None)
+                    pub = c.get_recent(bid)
+                    expected[wid] = [
+                        v for v in range(frm + 1, pub + 1)
+                        if v not in svc.vm.retired_versions(
+                            svc.vm.owner_of(bid, v))
+                    ]
+                    live[wid] = (bid, use_ttl)
+                    if use_ttl:
+                        ttl_wids.append(wid)
+                elif kind == 10 and live:           # unwatch one lease
+                    wid = sorted(live)[k % len(live)]
+                    sim.sleep(0.5)                  # settle in-flight sends
+                    drain(wid)
+                    c.unwatch(wid)
+                    if wid in ttl_wids:
+                        ttl_wids.remove(wid)
+                    del live[wid]
+                else:                               # time passes: TTLs lapse
+                    sim.sleep(ADVANCE)
+                    for wid in ttl_wids:
+                        drain(wid)                  # entitled up to expiry
+                        del live[wid]
+                    ttl_wids.clear()
+            sim.sleep(1.0)                          # settle the tail
+            for wid in sorted(live):
+                drain(wid)
+                c.unwatch(wid)
+            # expired leases (never unwatched): anything still arriving
+            # would be a delivery after death
+            for wid in set(delivered) - set(live):
+                if wid in expected and wid not in late:
+                    late[wid] = c.poll_notifications(wid)
+            return None
+
+        return prog
+
+    for p in range(n_pools):
+        sim.spawn(pool_program(p), name=f"pool{p:02d}")
+    sim.run()
+    return svc, expected, delivered, late
+
+
+def _seeds(pairs):
+    """hypothesis search when installed, a fixed grid otherwise."""
+    def deco(fn):
+        if HAVE_HYPOTHESIS:
+            return settings(max_examples=8, deadline=None)(given(
+                seed=st.integers(min_value=0, max_value=2**16),
+                n_pools=st.integers(min_value=1, max_value=3),
+            )(fn))
+        return pytest.mark.parametrize("seed,n_pools", pairs)(fn)
+    return deco
+
+
+@_seeds([(0, 1), (7, 2), (1234, 3), (42, 1), (99, 2)])
+def test_delivered_streams_match_the_poll_twin_oracle(seed, n_pools):
+    svc, expected, delivered, late = _run_watch_history(
+        seed, n_pools, ops_per_pool=14)
+    assert set(delivered) == set(expected)
+    for wid in sorted(expected):
+        assert delivered[wid] == expected[wid], (
+            f"{wid}: delivered {delivered[wid]}, oracle {expected[wid]}")
+        # per-watcher monotone, no duplicates (implied by the oracle,
+        # asserted independently so a wrong oracle cannot mask it)
+        assert delivered[wid] == sorted(set(delivered[wid]))
+    for wid, tail in late.items():
+        assert tail == [], f"{wid} delivered after expiry/unwatch: {tail}"
+
+
+def _replay_seeds(fn):
+    if HAVE_HYPOTHESIS:
+        return settings(max_examples=4, deadline=None)(given(
+            seed=st.integers(min_value=0, max_value=2**16))(fn))
+    return pytest.mark.parametrize("seed", [0, 7, 1234])(fn)
+
+
+@_replay_seeds
+def test_watch_histories_replay_identically(seed):
+    """Same seed -> identical delivered streams and trace digest (the
+    subscription plane is deterministic under the virtual clock)."""
+    a = _run_watch_history(seed, n_pools=2, ops_per_pool=12)
+    b = _run_watch_history(seed, n_pools=2, ops_per_pool=12)
+    assert a[2] == b[2]   # delivered streams
+    assert a[1] == b[1]   # oracle streams

@@ -33,6 +33,7 @@ SNIPPET_FILES = [
     "docs/concurrency.md",
     "docs/checkpoint.md",
     "docs/durability.md",
+    "docs/watch.md",
 ]
 
 _FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
