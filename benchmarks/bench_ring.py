@@ -1,0 +1,236 @@
+"""Elastic membership benchmark: ring rebalance cost, live join/drain,
+flash-crowd mitigation (paper §3 "dynamic provider set", arXiv
+2201.13292 reconfiguration).
+
+Four contracts, each asserted and written to ``BENCH_ring.json``:
+
+* **Rebalance is near-minimal.**  A provider join must move no more
+  payload than the bytes the ring now owes the joiner; a drain no more
+  than the bytes the drainer held.  Both minima are computed from the
+  page inventory alone (not from the migration plan), and the payload
+  actually moved — ``provider_migrated_payload_bytes`` — must stay
+  within ``REBALANCE_SLACK`` (1.25x) of them.
+* **Zero failed ops under churn.**  The ``rolling_restart`` (drain →
+  deregister → rejoin x3, readers throughout) and ``scale_out`` (two
+  joins mid-run, appenders + readers throughout) scenarios finish with
+  every client's ``failed_reads == 0`` and no errors: the old owner
+  serves every page until its move lands and the relocation pointer
+  flips.
+* **Flash-crowd load flattens.**  The ``flash_crowd`` scenario runs
+  twice from the same seed — balancer on vs off — and the cumulative
+  per-provider served-read load (read *after* the run, so the
+  measurement can't race the crowd) must spread over more providers
+  with a strictly lower peak when mitigation widens the hot pages.
+* **Churn replays deterministically.**  The same seed with the same
+  ``join:``/``drain:``/``flashcrowd:`` chaos schedule produces
+  identical trace digests.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Reporter
+from repro.core.scenarios import build_env, run_scenario
+
+SEED = 17
+N_CLIENTS = 12
+OPS = 3
+PRELOAD_CHUNKS = 24          # 96 pages x 64 KiB = 6 MiB inventory
+REBALANCE_SLACK = 1.25       # moved payload vs theoretical minimum
+
+CHAOS = [(0.02, "drain:prov-0005"), (0.05, "flashcrowd:0"),
+         (0.08, "join:prov-0005")]
+
+
+def _uniq(provs):
+    return tuple(dict.fromkeys(provs))
+
+
+def _resident_bytes(svc, pid: str) -> int:
+    """Bytes of live inventory with a copy on ``pid`` — journaled
+    holders overridden by the relocation overlay, computed from the
+    inventory alone, independent of any migration plan."""
+    total = 0
+    for lg, (_blob, provs, length) in svc.vm.page_locations().items():
+        overlay = svc.pm.relocated(lg)
+        holders = overlay if overlay else _uniq(provs)
+        if pid in holders:
+            total += length
+    return total
+
+
+def _payload_moved(svc) -> int:
+    return svc.pm.rpc_counters()["migrated_payload_bytes"]
+
+
+def _rebalance() -> dict:
+    """Join then drain one provider on a preloaded 2-way-replicated
+    deployment; compare moved payload against the inventory minima."""
+    env = build_env(2, seed=SEED, scenario="scale_out",
+                    data_replication=2)
+    c = env.client("bench-setup")
+    blob = c.create(psize=env.psize)
+    for k in range(PRELOAD_CHUNKS):
+        c.append(blob, bytes([(k % 251) + 1]) * env.chunk)
+    version = c.get_recent(blob)
+    svc = env.svc
+
+    # --- join: minimum = bytes the ring owes the joiner (it ends up
+    # resident there; nothing else should have been carried).
+    joiner = "prov-bench-join"
+    before = _payload_moved(svc)
+    plan = svc.join_provider(joiner)
+    join_stats = svc.run_migration(plan)
+    join_moved = _payload_moved(svc) - before
+    join_min = _resident_bytes(svc, joiner)
+
+    # --- drain: minimum = bytes the drainer held when the drain began.
+    drainer = "prov-0003"
+    drain_min = _resident_bytes(svc, drainer)
+    before = _payload_moved(svc)
+    drain_stats = svc.drain_provider(drainer)
+    drain_moved = _payload_moved(svc) - before
+
+    # the blob must read back byte-identical after both reconfigurations
+    reader = env.client("bench-reader")
+    for k in range(PRELOAD_CHUNKS):
+        data = reader.read(blob, version, k * env.chunk, env.chunk)
+        assert data == bytes([(k % 251) + 1]) * env.chunk, k
+
+    # metadata-plane elasticity rides along: grow then shrink the DHT
+    meta_before = dict(svc.dht.rpc_counters())
+    svc.add_meta_shard("meta-bench")
+    svc.drain_meta_shard("meta-bench")
+    meta_keys_moved = (svc.dht.rpc_counters()["migrate_keys"]
+                       - meta_before.get("migrate_keys", 0))
+    assert reader.get_size(blob, version) == PRELOAD_CHUNKS * env.chunk
+
+    return {
+        "join_payload_bytes": join_moved,
+        "join_min_bytes": join_min,
+        "join_ratio": join_moved / max(join_min, 1),
+        "join_moves": join_stats["moves"],
+        "drain_payload_bytes": drain_moved,
+        "drain_min_bytes": drain_min,
+        "drain_ratio": drain_moved / max(drain_min, 1),
+        "drain_moves": drain_stats["moves"] + drain_stats["stragglers"],
+        "meta_keys_moved": meta_keys_moved,
+    }
+
+
+def _failed_ops(result) -> int:
+    return sum(res.get("failed_reads", 0)
+               for res in result.client_results.values()
+               if isinstance(res, dict))
+
+
+def _flash_crowd_twin(mitigate: bool):
+    env = build_env(N_CLIENTS, seed=SEED, scenario="flash_crowd",
+                    ops_per_client=OPS)
+    env.state["flashcrowd_mitigate"] = mitigate
+    result = run_scenario("flash_crowd", N_CLIENTS, seed=SEED, env=env)
+    assert not result.errors, result.errors
+    # Cumulative per-provider served-read load, read AFTER the run:
+    # the in-run balancer snapshot can race the crowd's tail.
+    load = sorted(env.svc.pm.read_load().values(), reverse=True)
+    return env, result, load
+
+
+def run(rep: Reporter) -> None:
+    reb = _rebalance()
+    assert reb["join_min_bytes"] > 0, reb
+    assert reb["join_ratio"] <= REBALANCE_SLACK, reb
+    assert reb["drain_min_bytes"] > 0, reb
+    assert reb["drain_ratio"] <= REBALANCE_SLACK, reb
+
+    rolling = run_scenario("rolling_restart", N_CLIENTS, seed=SEED,
+                           ops_per_client=OPS)
+    assert not rolling.errors, rolling.errors
+    scale = run_scenario("scale_out", N_CLIENTS, seed=SEED,
+                         ops_per_client=OPS)
+    assert not scale.errors, scale.errors
+    failed = _failed_ops(rolling) + _failed_ops(scale)
+
+    _, mit_res, mit_load = _flash_crowd_twin(True)
+    _, raw_res, raw_load = _flash_crowd_twin(False)
+    widened = sum(res.get("widened_pages", 0)
+                  for res in mit_res.client_results.values()
+                  if isinstance(res, dict))
+    crowd_failed = _failed_ops(mit_res) + _failed_ops(raw_res)
+
+    chaos1 = run_scenario("scale_out", N_CLIENTS, seed=SEED,
+                          ops_per_client=OPS, failures=CHAOS)
+    assert not chaos1.errors, chaos1.errors
+    chaos2 = run_scenario("scale_out", N_CLIENTS, seed=SEED,
+                          ops_per_client=OPS, failures=CHAOS)
+    digest_match = chaos1.trace_digest == chaos2.trace_digest
+
+    gate = {
+        "join_ratio": reb["join_ratio"],
+        "drain_ratio": reb["drain_ratio"],
+        "rebalance_slack": REBALANCE_SLACK,
+        "failed_ops": failed + crowd_failed,
+        "widened_pages": widened,
+        "peak_load_mitigated": mit_load[0],
+        "peak_load_unmitigated": raw_load[0],
+        "peak_ratio": mit_load[0] / max(raw_load[0], 1),
+        "serving_providers_mitigated": len(mit_load),
+        "serving_providers_unmitigated": len(raw_load),
+        "digest_match": digest_match,
+    }
+    assert gate["failed_ops"] == 0, gate
+    assert gate["widened_pages"] > 0, gate
+    assert gate["peak_load_mitigated"] < gate["peak_load_unmitigated"], gate
+    assert (gate["serving_providers_mitigated"]
+            > gate["serving_providers_unmitigated"]), gate
+    assert gate["digest_match"], gate
+
+    rep.add("ring_rebalance", 0.0,
+            f"join_ratio={reb['join_ratio']:.3f};"
+            f"drain_ratio={reb['drain_ratio']:.3f};"
+            f"join_moves={reb['join_moves']};"
+            f"drain_moves={reb['drain_moves']};"
+            f"meta_keys={reb['meta_keys_moved']}")
+    rep.add("ring_churn", 0.0,
+            f"rolling_makespan={rolling.makespan:.4f}s;"
+            f"scale_makespan={scale.makespan:.4f}s;"
+            f"failed_ops={failed}")
+    rep.add("ring_flash_crowd", 0.0,
+            f"peak_mit={mit_load[0]};peak_raw={raw_load[0]};"
+            f"spread_mit={len(mit_load)};spread_raw={len(raw_load)};"
+            f"widened={widened}")
+    rep.add("ring_chaos_replay", 0.0,
+            f"digest_match={digest_match};"
+            f"makespan={chaos1.makespan:.4f}s")
+
+    out = os.path.join(os.getcwd(), "BENCH_ring.json")
+    with open(out, "w") as f:
+        json.dump({
+            "bench": "ring",
+            "seed": SEED,
+            "n_clients": N_CLIENTS,
+            "ops_per_client": OPS,
+            "preload_chunks": PRELOAD_CHUNKS,
+            "rebalance": reb,
+            "churn": {
+                "rolling_makespan_s": rolling.makespan,
+                "scale_out_makespan_s": scale.makespan,
+                "failed_ops": failed,
+            },
+            "flash_crowd": {
+                "load_mitigated": mit_load,
+                "load_unmitigated": raw_load,
+                "widened_pages": widened,
+                "failed_ops": crowd_failed,
+            },
+            "chaos": {
+                "schedule": [[t, s] for t, s in CHAOS],
+                "trace_digest": chaos1.trace_digest,
+                "digest_match": digest_match,
+            },
+            "gate": gate,
+        }, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {out}", flush=True)

@@ -13,8 +13,8 @@ import sys
 from benchmarks.common import Reporter
 
 BENCHES = ["append", "read", "meta", "space", "gc", "cache", "ckpt",
-           "failover", "durability", "watch", "kernels", "roofline",
-           "concurrency", "e2e"]
+           "failover", "durability", "watch", "ring", "kernels",
+           "roofline", "concurrency", "e2e"]
 
 
 def main() -> None:
@@ -42,6 +42,8 @@ def main() -> None:
             from benchmarks import bench_durability as m
         elif name == "watch":
             from benchmarks import bench_watch as m
+        elif name == "ring":
+            from benchmarks import bench_ring as m
         elif name == "kernels":
             from benchmarks import bench_kernels as m
         elif name == "roofline":

@@ -703,8 +703,10 @@ class BlobClient:
         # and tags new page ids so their layout is self-describing
         # ("pg-...-ec6+2" pages fan into shards on the read path).
         policy = self.pm.policy_for(blob_id)
-        groups = self.pm.allocate(len(flat), blob_id=blob_id)
-        puts = [(groups[i], fresh_page_id(tag=policy.tag), payload)
+        page_ids = [fresh_page_id(tag=policy.tag) for _ in flat]
+        groups = self.pm.allocate(len(flat), blob_id=blob_id,
+                                  page_ids=page_ids)
+        puts = [(groups[i], page_ids[i], payload)
                 for i, (_idx, _rel, payload) in enumerate(flat)]
         locations, done_at = self.pm.store_pages(puts, peer=self.name)
         for (idx, rel, payload), (_g, pid, _p), provs in zip(flat, puts,
@@ -798,8 +800,10 @@ class BlobClient:
             lo = max(off, page_start)
             hi = min(end, page_end_new)
             page[lo - page_start:hi - page_start] = buf[lo - off:hi - off]
-            puts.append((self.pm.allocate(1, blob_id=blob_id)[0],
-                         fresh_page_id(tag=policy.tag), bytes(page)))
+            bpid = fresh_page_id(tag=policy.tag)
+            puts.append((self.pm.allocate(1, blob_id=blob_id,
+                                          page_ids=[bpid])[0],
+                         bpid, bytes(page)))
             metas.append((k, length))
         locations, done_at = self.pm.store_pages(puts, peer=self.name)
         for (_g, pid, _payload), provs, (k, length) in zip(puts, locations,

@@ -1,24 +1,46 @@
 """Metadata DHT.
 
 Paper §4.1/§5: tree nodes are stored on metadata providers "in a
-distributed way, using a simple DHT" with a "simple static distribution
-scheme".  We implement exactly that: a static hash partition over M
-metadata shards.  Keys are immutable once written (new metadata is
-always *created*, never updated — the paper's key design choice), which
-is what makes lock-free concurrent access safe.
+distributed way, using a simple DHT".  The paper's "simple static
+distribution scheme" is replaced by a consistent-hash ring
+(:class:`~repro.core.placement.HashRing`): a key's home shards are its
+``replication`` distinct ring owners, so placement stays a pure
+function of (ring membership, key) while shards can now join and drain
+*online*.  Keys are immutable once written (new metadata is always
+*created*, never updated — the paper's key design choice), which is
+what makes lock-free concurrent access safe.
 
-Beyond-paper: optional R-way replication of each key across consecutive
-shards (the paper lists volatility/failure support as future work), plus
-replica racing on reads for straggler mitigation.
+Reconfiguration follows the Fragmented-ARES playbook (arXiv:2201.13292):
+while a join/drain is in flight the ring keeps BOTH configurations and
+a per-range configuration pointer — the merged arc set of the old and
+new rings.  Writes land on the union of both configurations' owners
+(idempotent re-puts are permitted, so a racing writer can never lose a
+key to a mid-flight range transfer); reads race the same union.  A
+budgeted migration round copies each arc's keys to their new owners and
+then flips that arc's pointer; once every arc has flipped, a completion
+sweep re-verifies every key against the final ring, deletes the copies
+on shards that no longer own them, and (for a drain) deregisters the
+now-empty shard — zero failed ops throughout.
+
+Beyond-paper: optional R-way replication of each key across distinct
+ring owners (the paper lists volatility/failure support as future
+work), plus replica racing on reads for straggler mitigation.
 """
 
 from __future__ import annotations
 
 import threading
-import zlib
-from typing import Dict, Hashable, List, Optional, Tuple
+from typing import Dict, Hashable, List, Optional, Set, Tuple
 
-from repro.core.transport import DELETE_NODE_KEY_BYTES, EndpointDown, Wire
+from repro.core.placement import HashRing
+from repro.core.placement import stable_hash as _ring_hash
+from repro.core.transport import (
+    DELETE_NODE_KEY_BYTES,
+    MIGRATE_META_KEY_BYTES,
+    RING_ANNOUNCE_BYTES,
+    EndpointDown,
+    Wire,
+)
 
 
 class MetadataShard:
@@ -58,6 +80,11 @@ class MetadataShard:
         with self._lock:
             return self._kv.pop(key, None) is not None
 
+    def keys(self) -> List[Hashable]:
+        """Snapshot of the shard's stored keys (migration planning)."""
+        with self._lock:
+            return list(self._kv)
+
     def __len__(self) -> int:
         with self._lock:
             return len(self._kv)
@@ -80,6 +107,17 @@ class MetadataDHT:
         self.shards: List[MetadataShard] = [
             MetadataShard(f"meta-{i:04d}", wire) for i in range(n_shards)
         ]
+        self._by_id: Dict[str, MetadataShard] = {
+            s.shard_id: s for s in self.shards}
+        self.ring = HashRing(self._by_id)
+        # ARES-style reconfiguration state: while a join/drain is in
+        # flight, ``_old_ring`` holds the previous configuration,
+        # ``_arcs`` the merged per-range pointer boundaries, and
+        # ``_flipped`` the arcs already transferred to the new ring.
+        self._old_ring: Optional[HashRing] = None
+        self._arcs: List[int] = []
+        self._flipped: Set[int] = set()
+        self._draining_shard: Optional[str] = None
         self._ctr_lock = threading.Lock()
         self._counters: Dict[str, int] = {
             "get_keys": 0,        # logical keys requested
@@ -90,6 +128,9 @@ class MetadataDHT:
             "put_shard_rpcs": 0,
             "delete_keys": 0,        # logical keys swept
             "delete_shard_rpcs": 0,  # batched per-shard delete round trips
+            "migrate_keys": 0,       # key copies moved by ring rebalance
+            "migrate_shard_rpcs": 0,  # batched per-shard migration round trips
+            "arcs_flipped": 0,       # per-range configuration-pointer flips
         }
 
     def _count(self, **deltas: int) -> None:
@@ -113,11 +154,189 @@ class MetadataDHT:
         the wire path, ``get_keys_cached`` = keys that did not)."""
         self._count(get_keys_cached=n)
 
-    # -- key placement: static hash, R consecutive shards -----------------------
+    # -- key placement: consistent-hash ring, R distinct owners -----------------
+    @staticmethod
+    def key_pos(key: Hashable) -> int:
+        """Ring position of a metadata key (stable across runs — keys
+        are tuples of deterministic components, never raw page ids)."""
+        return _ring_hash(repr(key))
+
     def _home_shards(self, key: Hashable) -> List[MetadataShard]:
-        h = zlib.crc32(repr(key).encode())
-        n = len(self.shards)
-        return [self.shards[(h + r) % n] for r in range(self.replication)]
+        """The shards serving ``key`` right now.
+
+        Steady state: the key's ``replication`` distinct ring owners.
+        Mid-reconfiguration, the per-range configuration pointer
+        decides: a flipped arc routes to the new ring alone; an
+        unflipped arc routes to the UNION of old and new owners — puts
+        land on both configurations (idempotent re-puts make that safe)
+        and reads race both, so no interleaving of writers with the
+        range transfer can lose or miss a key.
+        """
+        pos = self.key_pos(key)
+        if self._old_ring is None:
+            ids = self.ring.owners_at(pos, self.replication)
+        else:
+            new = self.ring.owners_at(pos, self.replication)
+            if HashRing.arc_index(self._arcs, pos) in self._flipped:
+                ids = new
+            else:
+                old = self._old_ring.owners_at(pos, self.replication)
+                ids = list(dict.fromkeys(old + new))
+        return [self._by_id[i] for i in ids]
+
+    # -- elastic membership ------------------------------------------------------
+    @property
+    def reconfiguring(self) -> bool:
+        return self._old_ring is not None
+
+    def _begin_reconfig(self, old_nodes: Set[str]) -> None:
+        self.wire.transfer(self.shards[0].shard_id, RING_ANNOUNCE_BYTES,
+                           inbound=True, async_peer=True)
+        self._old_ring = HashRing(old_nodes)
+        self._arcs = HashRing.merged_arcs(self._old_ring, self.ring)
+        self._flipped = set()
+
+    def begin_join(self, shard_id: str) -> MetadataShard:
+        """A metadata shard joins the ring; its owed key ranges arrive
+        via subsequent :meth:`migration_round` calls (ARES: transfer
+        the fragment set, then flip each range's pointer)."""
+        if self._old_ring is not None:
+            raise RuntimeError("a ring reconfiguration is already in flight")
+        if shard_id in self._by_id:
+            raise ValueError(f"shard {shard_id} already registered")
+        old_nodes = self.ring.nodes()
+        shard = MetadataShard(shard_id, self.wire)
+        self.shards.append(shard)
+        self._by_id[shard_id] = shard
+        self.ring.add(shard_id)
+        self._begin_reconfig(old_nodes)
+        return shard
+
+    def begin_drain(self, shard_id: str) -> None:
+        """Start draining a shard: it leaves the new configuration at
+        once (new writes stop targeting it beyond the transfer window)
+        but keeps serving its arcs until they flip; the completion sweep
+        deregisters it empty."""
+        if self._old_ring is not None:
+            raise RuntimeError("a ring reconfiguration is already in flight")
+        if shard_id not in self._by_id:
+            raise KeyError(f"unknown shard {shard_id}")
+        if len(self.shards) - 1 < self.replication:
+            raise RuntimeError(
+                f"draining {shard_id} would leave fewer shards than "
+                f"replication={self.replication}")
+        old_nodes = self.ring.nodes()
+        self.ring.remove(shard_id)
+        self._draining_shard = shard_id
+        self._begin_reconfig(old_nodes)
+
+    def migration_round(self, budget_bytes: int) -> Dict[str, int]:
+        """One budgeted migration round of the in-flight reconfiguration.
+
+        Scans the old configuration's shards once, buckets keys by
+        merged arc, copies each unflipped arc's keys to their new-ring
+        owners (one batched round trip per destination shard), and
+        flips the arc's configuration pointer.  Arcs are processed in
+        ring order and the round stops when the byte budget is spent —
+        migration runs *concurrently* with client traffic, never as a
+        stop-the-world pass.  When every arc has flipped, a completion
+        sweep deletes stale copies from shards that no longer own their
+        keys and deregisters a drained shard.  Returns round stats with
+        ``done=1`` once the reconfiguration is fully complete.
+        """
+        stats = {"arcs_flipped": 0, "keys_moved": 0, "bytes_moved": 0,
+                 "done": 0}
+        if self._old_ring is None:
+            stats["done"] = 1
+            return stats
+        per_key = self.node_nbytes + MIGRATE_META_KEY_BYTES
+        # one scan, bucketed by arc (keys seen on any old-config shard)
+        by_arc: Dict[int, Dict[Hashable, MetadataShard]] = {}
+        for shard in self.shards:
+            for key in shard.keys():
+                arc = HashRing.arc_index(self._arcs, self.key_pos(key))
+                if arc in self._flipped:
+                    continue
+                by_arc.setdefault(arc, {}).setdefault(key, shard)
+        spent = 0
+        for arc in range(len(self._arcs)):
+            if arc in self._flipped:
+                continue
+            moves: Dict[MetadataShard, List[Hashable]] = {}
+            for key, holder in sorted(
+                    by_arc.get(arc, {}).items(),
+                    key=lambda kv: (self.key_pos(kv[0]), repr(kv[0]))):
+                for dst_id in self.ring.owners_at(
+                        self.key_pos(key), self.replication):
+                    dst = self._by_id[dst_id]
+                    if dst.get_local(key) is None:
+                        moves.setdefault(dst, []).append(key)
+            cost = per_key * sum(len(ks) for ks in moves.values())
+            if moves and spent and spent + cost > budget_bytes:
+                break  # budget spent; later arcs wait for the next round
+                # (a round always flips at least one non-empty arc, so an
+                # arc larger than the budget still makes progress)
+            for dst in sorted(moves, key=lambda s: s.shard_id):
+                batch = moves[dst]
+                self.wire.transfer_batch(
+                    dst.shard_id, [per_key] * len(batch), inbound=True,
+                    async_peer=True,
+                    fire_and_forget=self.wire.clock.is_virtual)
+                for key in batch:
+                    dst.put_local(key, by_arc[arc][key].get_local(key))
+                self._count(migrate_keys=len(batch), migrate_shard_rpcs=1)
+            spent += cost
+            self._flipped.add(arc)
+            self._count(arcs_flipped=1)
+            stats["arcs_flipped"] += 1
+            stats["keys_moved"] += sum(len(ks) for ks in moves.values())
+            stats["bytes_moved"] += cost
+        if len(self._flipped) >= len(self._arcs):
+            stats["bytes_moved"] += self._complete_reconfig()
+            stats["done"] = 1
+        return stats
+
+    def _complete_reconfig(self) -> int:
+        """Completion sweep: re-verify every key against the final ring
+        (catches a writer that raced an arc flip), delete copies from
+        shards that no longer own them, deregister a drained shard."""
+        moved_bytes = 0
+        per_key = self.node_nbytes + MIGRATE_META_KEY_BYTES
+        for shard in list(self.shards):
+            stale: List[Hashable] = []
+            for key in shard.keys():
+                owner_ids = self.ring.owners_at(
+                    self.key_pos(key), self.replication)
+                if shard.shard_id in owner_ids:
+                    continue
+                # safety net for raced writes: make sure every final
+                # owner holds the key before this copy goes away
+                for dst_id in owner_ids:
+                    dst = self._by_id[dst_id]
+                    if dst.get_local(key) is None:
+                        self.wire.transfer(
+                            dst.shard_id, per_key, inbound=True,
+                            async_peer=True,
+                            fire_and_forget=self.wire.clock.is_virtual)
+                        dst.put_local(key, shard.get_local(key))
+                        moved_bytes += per_key
+                        self._count(migrate_keys=1, migrate_shard_rpcs=1)
+                stale.append(key)
+            if stale:
+                self.wire.transfer_batch(
+                    shard.shard_id, [DELETE_NODE_KEY_BYTES] * len(stale),
+                    inbound=True, async_peer=True,
+                    fire_and_forget=self.wire.clock.is_virtual)
+                for key in stale:
+                    shard.delete_local(key)
+        if self._draining_shard is not None:
+            gone = self._by_id.pop(self._draining_shard)
+            self.shards.remove(gone)
+            self._draining_shard = None
+        self._old_ring = None
+        self._arcs = []
+        self._flipped = set()
+        return moved_bytes
 
     def put(self, key: Hashable, value: object, peer: Optional[str] = None) -> None:
         errs = []

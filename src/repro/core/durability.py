@@ -352,10 +352,18 @@ def lifecycle_round(
     descriptors are immutable — reads find the cold copy through
     ``ProviderManager.locate`` after the descriptor's replicas miss).
     EC shards demote individually; replicated pages converge to ONE
-    cold copy (cold durability is the object store's own).  Returns
-    ``{"demoted", "demoted_bytes", "deferred"}``.
+    cold copy (cold durability is the object store's own).
+
+    The reverse transition (ROADMAP item 1 follow-up): for blobs with a
+    ``promote_reads`` threshold (``set_lifecycle(..., promote_reads=N)``)
+    a cold page whose served-read tally (``ProviderManager.read_tallies``)
+    reached ``N`` moves back to a hot ring owner — repeated access
+    un-demotes, so a working set that turns hot again stops paying the
+    cold path on every read.  Returns ``{"demoted", "demoted_bytes",
+    "promoted", "promoted_bytes", "deferred"}``.
     """
-    stats = {"demoted": 0, "demoted_bytes": 0, "deferred": 0}
+    stats = {"demoted": 0, "demoted_bytes": 0,
+             "promoted": 0, "promoted_bytes": 0, "deferred": 0}
     if not svc.lifecycles:
         return stats
     cold_pool = sorted(
@@ -412,6 +420,60 @@ def lifecycle_round(
             stats["demoted"] += 1
             stats["demoted_bytes"] += nbytes
             svc.pm.note_repair(0, nbytes)
+
+    # ---- cold -> hot promotion on repeated access
+    promote_thresholds = getattr(svc, "promote_reads", {})
+    if promote_thresholds:
+        tallies = svc.pm.read_tallies()
+        for cold in cold_pool:
+            try:
+                listing = cold.list_pages(peer=peer)
+            except EndpointDown:
+                continue
+            for phys, _stored_at in sorted(listing):
+                logical = logical_pid(phys)
+                blob = blob_of.get(logical)
+                threshold = promote_thresholds.get(blob) if blob else None
+                if threshold is None or tallies.get(logical, 0) < threshold:
+                    continue
+                payload = cold.store.get(phys)
+                if payload is None:
+                    continue
+                if budget_bytes is not None and \
+                        spent + 2 * len(payload) > budget_bytes:
+                    stats["deferred"] += 1
+                    continue
+                if svc.pm.ring is not None:
+                    owners = svc.pm.ring_owners(
+                        svc.pm.place_key(logical), 1)
+                    target = _provider(svc, owners[0]) if owners else None
+                else:
+                    target = _pick_target(svc, exclude=set())
+                if target is None:
+                    stats["deferred"] += 1
+                    continue
+                try:
+                    # promotion mirrors demotion: read cold, write hot,
+                    # drop the cold copy, flip the overlay pointer
+                    data = cold.get_page(phys, peer=peer)
+                    target.put_pages([(phys, data)], peer=peer)
+                    cold.delete_pages([phys], peer=peer)
+                except EndpointDown:
+                    stats["deferred"] += 1
+                    continue
+                svc.pm.record_relocation(phys, (target.pid,))
+                if phys == logical:
+                    refreshed.append((logical, (target.pid,)))
+                nbytes = 2 * len(data)
+                spent += nbytes
+                stats["promoted"] += 1
+                stats["promoted_bytes"] += nbytes
+                svc.pm.note_promotion(1, nbytes)
+        # the threshold is "reads since the last lifecycle pass": start
+        # the next observation window now, or a once-hot page would
+        # re-promote forever on a stale tally
+        svc.pm.reset_read_tallies()
+
     if refreshed and getattr(svc.dedup_index, "ever_registered", False):
         svc.dedup_index.refresh_providers(
             list(dict.fromkeys(refreshed)), peer=peer)

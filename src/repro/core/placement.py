@@ -35,9 +35,11 @@ elimination in pure Python.
 
 from __future__ import annotations
 
+import bisect
+import hashlib
 import re
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -285,3 +287,144 @@ def parse_policy(spec) -> PlacementPolicy:
             raise ValueError(f"bad EC spec: {spec!r} (want 'ec:K+M')")
         return ErasureCodedPolicy(int(mt.group(1)), int(mt.group(2)))
     raise ValueError(f"unknown placement spec: {spec!r}")
+
+
+# ------------------------------------------------------------ hash ring
+#: virtual nodes per ring member.  High enough that 8 members spread a
+#: few hundred keys within the balance bounds the DHT tests assert, low
+#: enough that ring rebuilds stay O(members * vnodes * log) cheap.
+DEFAULT_VNODES = 64
+
+_RING_SPACE = 1 << 64
+
+
+def stable_hash(key: str) -> int:
+    """64-bit position of ``key`` on the ring.
+
+    Process-independent by construction (``hash()`` is randomized per
+    interpreter run): the same ring state + key always maps to the same
+    owners, which is what makes placement replayable across same-seed
+    runs and recomputable by any node without a directory lookup.
+    """
+    digest = hashlib.blake2b(key.encode(), digest_size=8).digest()
+    return int.from_bytes(digest, "big")
+
+
+class HashRing:
+    """Consistent-hash ring with virtual nodes (membership plane).
+
+    Placement is a pure function of (ring members, key): every member
+    is hashed onto the 64-bit ring at :data:`DEFAULT_VNODES` points,
+    and a key's owner group is the first ``width`` *distinct* members
+    found walking clockwise from the key's hash.  Adding or removing
+    one member therefore remaps only the arcs that member gains or
+    loses — the consistent-hashing minimal-movement property the
+    rebalance gate (``BENCH_ring.json``) measures.
+
+    The ring is membership state only — it holds node *ids*, never
+    sockets or stores — so two rings with the same members are
+    interchangeable, and a reconfiguration can diff an old ring
+    against a new one arc by arc (see ``MetadataDHT``'s ARES-style
+    per-range pointer flips).
+    """
+
+    def __init__(self, nodes: Iterable[str] = (), *,
+                 vnodes: int = DEFAULT_VNODES) -> None:
+        self.vnodes = vnodes
+        self._nodes: Set[str] = set()
+        self._points: List[int] = []          # sorted vnode positions
+        self._owner_at: Dict[int, str] = {}   # position -> member id
+        for node in nodes:
+            self.add(node)
+
+    # -- membership --------------------------------------------------------
+    def add(self, node: str) -> None:
+        if node in self._nodes:
+            return
+        self._nodes.add(node)
+        for i in range(self.vnodes):
+            pos = stable_hash(f"{node}#{i}")
+            # vanishing-probability collision: keep the lexically first
+            # owner so both colliders resolve identically everywhere
+            cur = self._owner_at.get(pos)
+            if cur is not None:
+                if node < cur:
+                    self._owner_at[pos] = node
+                continue
+            self._owner_at[pos] = node
+            bisect.insort(self._points, pos)
+
+    def remove(self, node: str) -> None:
+        if node not in self._nodes:
+            return
+        self._nodes.discard(node)
+        for i in range(self.vnodes):
+            pos = stable_hash(f"{node}#{i}")
+            if self._owner_at.get(pos) != node:
+                continue
+            del self._owner_at[pos]
+            idx = bisect.bisect_left(self._points, pos)
+            if idx < len(self._points) and self._points[idx] == pos:
+                self._points.pop(idx)
+
+    def nodes(self) -> Set[str]:
+        return set(self._nodes)
+
+    def __contains__(self, node: str) -> bool:
+        return node in self._nodes
+
+    def __len__(self) -> int:
+        return len(self._nodes)
+
+    # -- placement ---------------------------------------------------------
+    def owners(self, key: str, width: int,
+               eligible: Optional[Set[str]] = None) -> List[str]:
+        """The ``width`` distinct members owning ``key``, clockwise from
+        its hash.  ``eligible`` (when given) filters the walk — a downed
+        member is skipped deterministically, so the group for a key is a
+        pure function of (ring, key, eligible set).  Returns fewer than
+        ``width`` when the ring has fewer distinct eligible members."""
+        return self.owners_at(stable_hash(key), width, eligible)
+
+    def owners_at(self, pos: int, width: int,
+                  eligible: Optional[Set[str]] = None) -> List[str]:
+        if not self._points or width <= 0:
+            return []
+        out: List[str] = []
+        start = bisect.bisect_right(self._points, pos % _RING_SPACE)
+        n = len(self._points)
+        for step in range(n):
+            node = self._owner_at[self._points[(start + step) % n]]
+            if node in out:
+                continue
+            if eligible is not None and node not in eligible:
+                continue
+            out.append(node)
+            if len(out) >= width:
+                break
+        return out
+
+    # -- reconfiguration geometry ------------------------------------------
+    def arc_starts(self) -> List[int]:
+        """Sorted vnode positions — the ring's native arc boundaries.
+        Arc ``i`` is the clockwise interval ``(points[i-1], points[i]]``
+        (wrapping), whose keys are owned starting at ``points[i]``'s
+        successor walk."""
+        return list(self._points)
+
+    @staticmethod
+    def merged_arcs(old: "HashRing", new: "HashRing") -> List[int]:
+        """Union of both rings' arc boundaries: within one merged arc the
+        owner group is constant under BOTH configurations, which is the
+        granularity the ARES-style per-range configuration pointer flips
+        at."""
+        return sorted(set(old._points) | set(new._points))
+
+    @staticmethod
+    def arc_index(arcs: List[int], pos: int) -> int:
+        """Index of the merged arc containing ring position ``pos``:
+        keys in arc ``i`` satisfy ``arcs[i-1] < pos <= arcs[i]`` (arc 0
+        wraps past the last boundary)."""
+        if not arcs:
+            return 0
+        return bisect.bisect_left(arcs, pos % _RING_SPACE) % len(arcs)

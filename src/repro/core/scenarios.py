@@ -819,6 +819,195 @@ def _poll_watcher_program(env: ScenarioEnv, i: int):
     return poll_prog
 
 
+# ---------------------------------------------------------------------------
+# Elastic membership scenarios
+# ---------------------------------------------------------------------------
+
+
+def _setup_membership(env: ScenarioEnv) -> None:
+    """Preloaded blob for the membership scenarios; ``state['blobs']``
+    is set so index-based chaos targets resolve."""
+    _setup_preloaded(env)
+    env.state["blobs"] = [env.blob]
+
+
+def _rolling_restart_program(env: ScenarioEnv, i: int):
+    """Client 0 is the operator rolling the fleet: each cycled provider
+    is drained (transfer-out concurrent with the readers, zero failed
+    ops), deregistered, then rejoined as a fresh empty member that
+    receives its owed pages back via budgeted migration.  Everyone else
+    reads the preloaded blob throughout; ``failed_reads`` must stay 0 —
+    the old owner serves every page until its move lands."""
+    if i == 0:
+
+        def operator_prog() -> dict:
+            clock = env.svc.clock
+            sleep = float(env.state.get("migration_sleep", 0.005))
+            hot = sorted(p.pid for p in env.svc.pm.all_providers()
+                         if getattr(p, "tier", "hot") == "hot")
+            n_cycles = int(env.state.get(
+                "restart_cycles", min(3, max(1, len(hot) - 2))))
+            cycled = 0
+            moves = 0
+            for pid in hot[:n_cycles]:
+                clock.sleep(0.01)
+                stats = env.svc.drain_provider(pid, round_sleep=sleep)
+                moves += stats["moves"] + stats["stragglers"]
+                clock.sleep(0.01)
+                plan = env.svc.join_provider(pid)
+                back = env.svc.run_migration(plan, round_sleep=sleep)
+                moves += back["moves"]
+                cycled += 1
+            return {"ops": cycled, "bytes": 0, "cycled": cycled,
+                    "migration_moves": moves}
+
+        return operator_prog
+
+    def reader_prog() -> dict:
+        c = env.client(f"r{i:03d}")
+        v = env.state["version"]
+        size = c.get_size(env.blob, v)
+        clock = env.svc.clock
+        done = bytes_read = failed = 0
+        for k in range(env.ops_per_client * 2):
+            clock.sleep(0.008)
+            off = ((i + k * env.n_clients) * env.chunk) % max(
+                size - env.chunk, 1)
+            try:
+                data = c.read(env.blob, v, off, env.chunk)
+                assert len(data) == env.chunk
+                bytes_read += len(data)
+            except EndpointDown:
+                failed += 1
+            done += 1
+        return {"ops": done, "bytes": bytes_read, "failed_reads": failed}
+
+    return reader_prog
+
+
+def _scale_out_program(env: ScenarioEnv, i: int):
+    """Client 0 joins fresh providers mid-run and streams them their
+    owed pages while odd clients keep appending (new pages place onto
+    the joined members from their first allocation) and even clients
+    keep reading the preloaded snapshot — zero failed ops both ways."""
+    if i == 0:
+
+        def operator_prog() -> dict:
+            clock = env.svc.clock
+            sleep = float(env.state.get("migration_sleep", 0.005))
+            n_new = int(env.state.get("scale_out_by", 2))
+            joined = []
+            moves = 0
+            for j in range(n_new):
+                clock.sleep(0.02)
+                pid = f"prov-join-{j:02d}"
+                plan = env.svc.join_provider(pid)
+                stats = env.svc.run_migration(plan, round_sleep=sleep)
+                moves += stats["moves"]
+                joined.append(pid)
+            return {"ops": len(joined), "bytes": 0, "joined": joined,
+                    "migration_moves": moves}
+
+        return operator_prog
+
+    if i % 2 == 1:
+
+        def appender_prog() -> dict:
+            c = env.client(f"a{i:03d}")
+            clock = env.svc.clock
+            payload = bytes([i % 251 + 1]) * env.chunk
+            versions: List[int] = []
+            for _ in range(env.ops_per_client):
+                clock.sleep(0.006)
+                versions.append(c.append(env.blob, payload))
+            return {"ops": len(versions), "bytes": len(versions) * env.chunk,
+                    "versions": versions}
+
+        return appender_prog
+
+    def reader_prog() -> dict:
+        c = env.client(f"r{i:03d}")
+        v = env.state["version"]
+        size = c.get_size(env.blob, v)
+        clock = env.svc.clock
+        done = bytes_read = failed = 0
+        for k in range(env.ops_per_client):
+            clock.sleep(0.009)
+            off = ((i + k * env.n_clients) * env.chunk) % max(
+                size - env.chunk, 1)
+            try:
+                data = c.read(env.blob, v, off, env.chunk)
+                bytes_read += len(data)
+            except EndpointDown:
+                failed += 1
+            done += 1
+        return {"ops": done, "bytes": bytes_read, "failed_reads": failed}
+
+    return reader_prog
+
+
+def _setup_flash_crowd(env: ScenarioEnv) -> None:
+    """A small preloaded blob whose FIRST chunk every client hammers —
+    the flash crowd.  ``state['flashcrowd_mitigate']`` (default on)
+    lets the benchmark run a no-mitigation twin for the load contrast;
+    the shared page cache is pinned off because the crowd models
+    distinct client nodes hitting the providers directly."""
+    c = env.client("setup")
+    env.blob = c.create(psize=env.psize)
+    for k in range(4):
+        c.append(env.blob, bytes([(k % 251) + 1]) * env.chunk)
+    env.state["version"] = c.get_recent(env.blob)
+    env.state["blobs"] = [env.blob]
+    env.state.setdefault("flashcrowd_mitigate", True)
+    env.state.setdefault("flashcrowd_threshold", 16)
+    env.state.setdefault("flashcrowd_extra", 2)
+
+
+def _flash_crowd_program(env: ScenarioEnv, i: int):
+    """Client 0 is the load balancer: it samples the served-read
+    tallies every interval and widens any hot page onto its next ring
+    owners (``mitigate_flash_crowd``); the crowd keeps re-reading the
+    same first chunk.  The balancer's result carries the final
+    per-provider served-read load — the distribution ``bench_ring``
+    gates on (mitigated max-load must flatten vs the twin)."""
+    if i == 0:
+
+        def balancer_prog() -> dict:
+            clock = env.svc.clock
+            mitigate = bool(env.state.get("flashcrowd_mitigate", True))
+            rounds = widened = 0
+            for _ in range(max(6, env.ops_per_client * 2)):
+                clock.sleep(0.01)
+                rounds += 1
+                if mitigate:
+                    widened += len(env.svc.mitigate_flash_crowd(
+                        threshold=int(env.state["flashcrowd_threshold"]),
+                        extra=int(env.state["flashcrowd_extra"]),
+                        blob_id=env.blob))
+            return {"ops": rounds, "bytes": 0, "widened_pages": widened,
+                    "read_load": dict(env.svc.pm.read_load())}
+
+        return balancer_prog
+
+    def crowd_prog() -> dict:
+        c = env.client(f"c{i:03d}")
+        v = env.state["version"]
+        clock = env.svc.clock
+        done = bytes_read = failed = 0
+        for _ in range(env.ops_per_client * 2):
+            clock.sleep(0.004)
+            try:
+                data = c.read(env.blob, v, 0, env.chunk)
+                assert len(data) == env.chunk
+                bytes_read += len(data)
+            except EndpointDown:
+                failed += 1
+            done += 1
+        return {"ops": done, "bytes": bytes_read, "failed_reads": failed}
+
+    return crowd_prog
+
+
 SCENARIOS: Dict[str, Scenario] = {
     "readers": Scenario(
         "readers",
@@ -899,6 +1088,31 @@ SCENARIOS: Dict[str, Scenario] = {
         env_defaults={"page_cache_bytes": 0, "vm_replication": 2,
                       "vm_lease_ttl": 0.05},
     ),
+    "rolling_restart": Scenario(
+        "rolling_restart",
+        "Operator rolls the provider fleet: drain -> deregister -> "
+        "rejoin each member in turn while readers stay on the blob; "
+        "budget-capped migration keeps every op succeeding (elastic "
+        "membership)",
+        _setup_membership, _rolling_restart_program,
+        env_defaults={"page_cache_bytes": 0},
+    ),
+    "scale_out": Scenario(
+        "scale_out",
+        "Fresh providers join mid-run and receive exactly their owed "
+        "key ranges while appenders and readers keep running (online "
+        "consistent-hash rebalance)",
+        _setup_membership, _scale_out_program,
+        env_defaults={"page_cache_bytes": 0},
+    ),
+    "flash_crowd": Scenario(
+        "flash_crowd",
+        "Every client hammers one chunk; a load balancer samples read "
+        "tallies and widens the hot pages onto their next ring owners "
+        "(load-aware replica widening vs the unmitigated twin)",
+        _setup_flash_crowd, _flash_crowd_program,
+        env_defaults={"page_cache_bytes": 0},
+    ),
     "train_serve": Scenario(
         "train_serve",
         "Integrated train/serve loop: trainers stream corpus shards, the "
@@ -922,10 +1136,18 @@ def parse_failure_target(target: str) -> Tuple[str, object]:
     ``"vm-leader:<idx>"`` -> ``("vm-leader", idx)`` — down the replicated
     version-manager leader of the idx-th setup blob's lineage;
     ``"corrupt:<provider>"`` -> ``("corrupt", provider)`` — flip bytes of
-    that provider's first stored page behind its back; any other
-    non-empty string -> ``("kill", target)`` — a data provider to down.
-    Malformed specs raise ``ValueError`` (so ``run_scenario`` rejects
-    them up front, before any virtual time has elapsed).
+    that provider's first stored page behind its back;
+    ``"join:<provider>"`` -> ``("join", provider)`` — an elastic-membership
+    event: the named provider joins the ring and receives its owed pages
+    via budgeted migration rounds; ``"drain:<provider>"`` ->
+    ``("drain", provider)`` — the named provider transfers out and
+    deregisters with zero failed ops; ``"flashcrowd:<idx>"`` ->
+    ``("flashcrowd", idx)`` — run one flash-crowd mitigation pass scoped
+    to the idx-th setup blob (widen its hot pages onto their next ring
+    owners); any other non-empty string -> ``("kill", target)`` — a data
+    provider to down.  Malformed specs raise ``ValueError`` (so
+    ``run_scenario`` rejects them up front, before any virtual time has
+    elapsed).
     """
     if not target:
         raise ValueError("empty failure target")
@@ -945,6 +1167,27 @@ def parse_failure_target(target: str) -> Tuple[str, object]:
         if not prov:
             raise ValueError("corrupt target names no provider")
         return "corrupt", prov
+    if target.startswith("join:"):
+        prov = target.split(":", 1)[1]
+        if not prov:
+            raise ValueError("join target names no provider")
+        return "join", prov
+    if target.startswith("drain:"):
+        prov = target.split(":", 1)[1]
+        if not prov:
+            raise ValueError("drain target names no provider")
+        return "drain", prov
+    if target.startswith("flashcrowd:"):
+        raw = target.split(":", 1)[1]
+        try:
+            idx = int(raw)
+        except ValueError:
+            raise ValueError(
+                f"flashcrowd index must be an integer, got {raw!r}"
+            ) from None
+        if idx < 0:
+            raise ValueError(f"flashcrowd index must be >= 0, got {idx}")
+        return "flashcrowd", idx
     return "kill", target
 
 
@@ -982,6 +1225,33 @@ def apply_failure_target(svc: BlobSeerService, state: Dict[str, object],
             # (digests, timestamps) untouched
             prov.store.delete(vic)
             prov.store.put(vic, bytes([payload[0] ^ 0xFF]) + payload[1:])
+        return target
+    if kind == "join":
+        # elastic scale-out mid-run: the member starts taking new pages
+        # at once; its owed already-stored pages stream over in budgeted
+        # rounds that yield virtual time to the surrounding clients
+        plan = svc.join_provider(arg)  # type: ignore[arg-type]
+        svc.run_migration(
+            plan, round_sleep=float(state.get("migration_sleep", 0.005)))
+        return target
+    if kind == "drain":
+        svc.drain_provider(
+            arg,  # type: ignore[arg-type]
+            round_sleep=float(state.get("migration_sleep", 0.005)))
+        return target
+    if kind == "flashcrowd":
+        blobs = state.get("blobs")
+        if not blobs:
+            raise ValueError(
+                "flashcrowd target needs setup blobs in env.state['blobs']")
+        if arg >= len(blobs):  # type: ignore[operator]
+            raise ValueError(
+                f"flashcrowd index {arg} out of range "
+                f"(setup created {len(blobs)} blobs)")  # type: ignore[arg-type]
+        svc.mitigate_flash_crowd(
+            threshold=int(state.get("flashcrowd_threshold", 32)),
+            extra=int(state.get("flashcrowd_extra", 1)),
+            blob_id=blobs[arg])  # type: ignore[index]
         return target
     svc.kill_provider(arg)
     return target

@@ -46,7 +46,7 @@ class BlobSeerService:
         *,
         data_replication: int = 1,
         meta_replication: int = 1,
-        placement: str = "round_robin",
+        placement: str = "ring",
         verify_digests: bool = False,
         wire: Optional[Wire] = None,
         wal_path: Optional[str] = None,
@@ -130,8 +130,11 @@ class BlobSeerService:
         self._verify = verify_digests
         # Per-blob lifecycle policy: blob_id -> demote-after age
         # (simulated seconds).  Pages older than the threshold are moved
-        # to the cold tier by ``durability.lifecycle_round``.
+        # to the cold tier by ``durability.lifecycle_round``; blobs with
+        # a ``promote_reads`` threshold move cold pages back to the hot
+        # tier once their read tally crosses it.
         self.lifecycles: Dict[str, float] = {}
+        self.promote_reads: Dict[str, int] = {}
         self._monitor: Optional[threading.Thread] = None
         self._monitor_stop = threading.Event()
         self._monitor_errors = 0   # retryable recovery failures (see rpc_report)
@@ -164,17 +167,117 @@ class BlobSeerService:
         self.pm.register(prov)
         return prov
 
+    def join_provider(self, pid: str, tier: str = "hot"):
+        """A provider joins the live ring: registered for new-page
+        placement immediately, and the returned plan (run it with
+        :meth:`run_migration`) transfers it exactly the already-stored
+        pages the ring now assigns to it."""
+        from repro.core.membership import join_provider
+
+        return join_provider(self, pid, tier=tier)
+
+    def start_drain(self, pid: str):
+        """Take a provider out of placement (it keeps serving reads)
+        and return its transfer-out plan; call :meth:`finish_drain`
+        once the plan has run to deregister it."""
+        from repro.core.membership import start_drain
+
+        return start_drain(self, pid)
+
+    def finish_drain(self, pid: str) -> int:
+        """Straggler sweep + deregistration closing out a drain."""
+        from repro.core.membership import finish_drain
+
+        return finish_drain(self, pid)
+
+    def drain_provider(self, pid: str, *, budget_bytes: Optional[int] = None,
+                       round_sleep: float = 0.0) -> Dict[str, int]:
+        """Full provider drain: plan, budgeted transfer concurrent with
+        client traffic, straggler sweep, deregistration — zero failed
+        ops (see ``core/membership.py``)."""
+        from repro.core.membership import (
+            DEFAULT_MIGRATION_BUDGET,
+            drain_provider,
+        )
+
+        return drain_provider(
+            self, pid, round_sleep=round_sleep,
+            budget_bytes=(DEFAULT_MIGRATION_BUDGET if budget_bytes is None
+                          else budget_bytes))
+
+    def run_migration(self, plan, *, budget_bytes: Optional[int] = None,
+                      round_sleep: float = 0.0) -> Dict[str, int]:
+        """Drive a join/drain plan's budget-capped rounds."""
+        from repro.core.membership import (
+            DEFAULT_MIGRATION_BUDGET,
+            run_migration,
+        )
+
+        return run_migration(
+            self, plan, round_sleep=round_sleep,
+            budget_bytes=(DEFAULT_MIGRATION_BUDGET if budget_bytes is None
+                          else budget_bytes))
+
+    def add_meta_shard(self, shard_id: str,
+                       budget_bytes: int = 1 << 20) -> None:
+        """Grow the metadata DHT online: the shard joins the ring and
+        its owed key ranges migrate over in budgeted rounds (ARES-style
+        per-arc pointer flips — see ``core/dht.py``)."""
+        self.dht.begin_join(shard_id)
+        while not self.dht.migration_round(budget_bytes)["done"]:
+            pass
+
+    def drain_meta_shard(self, shard_id: str,
+                         budget_bytes: int = 1 << 20) -> None:
+        """Shrink the metadata DHT online: the shard's ranges transfer
+        out arc by arc, then it deregisters empty."""
+        self.dht.begin_drain(shard_id)
+        while not self.dht.migration_round(budget_bytes)["done"]:
+            pass
+
+    def mitigate_flash_crowd(self, *, threshold: int = 32, extra: int = 1,
+                             blob_id: Optional[str] = None):
+        """One flash-crowd relief pass: widen every hot page's replica
+        set onto its next ring owners (see ``core/membership.py``)."""
+        from repro.core.membership import mitigate_flash_crowd
+
+        return mitigate_flash_crowd(self, threshold=threshold, extra=extra,
+                                    blob_id=blob_id)
+
+    def ring_report(self) -> Dict[str, object]:
+        """Elastic-membership introspection: ring members on each
+        plane, in-flight reconfiguration state, migration counters."""
+        pm_ctr = self.pm.rpc_counters()
+        return {
+            "data_ring": sorted(self.pm.ring.nodes())
+            if self.pm.ring is not None else [],
+            "data_draining": sorted(self.pm._draining),
+            "data_departed": sorted(self.pm._departed),
+            "meta_ring": sorted(self.dht.ring.nodes()),
+            "meta_reconfiguring": self.dht.reconfiguring,
+            "migrated_pages": pm_ctr["migrated_pages"],
+            "migrated_bytes": pm_ctr["migrated_bytes"],
+            "migrated_payload_bytes": pm_ctr["migrated_payload_bytes"],
+            "widened_pages": pm_ctr["widened_pages"],
+            "promoted_pages": pm_ctr["promoted_pages"],
+        }
+
     # ----------------------------------------------------- durability policy
     def set_blob_placement(self, blob_id: str, spec) -> None:
         """Select this blob's placement for future pages: ``"rep:N"``
         or ``"ec:K+M"`` (see ``repro.core.placement``)."""
         self.pm.set_blob_policy(blob_id, spec)
 
-    def set_lifecycle(self, blob_id: str, demote_after: float) -> None:
+    def set_lifecycle(self, blob_id: str, demote_after: float,
+                      promote_reads: Optional[int] = None) -> None:
         """Demote this blob's pages to the cold tier once they are
         ``demote_after`` simulated seconds old (applied by
-        ``durability.lifecycle_round``)."""
+        ``durability.lifecycle_round``).  ``promote_reads`` adds the
+        reverse transition: a cold page read at least that many times
+        since the last lifecycle pass moves back to the hot tier."""
         self.lifecycles[blob_id] = float(demote_after)
+        if promote_reads is not None:
+            self.promote_reads[blob_id] = int(promote_reads)
 
     def scrub(self, budget_bytes: Optional[int] = None,
               peer: str = "scrubber") -> Dict[str, int]:

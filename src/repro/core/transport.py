@@ -101,6 +101,19 @@ DEDUP_REFRESH_REQ_BYTES = 56   # one (page_id, new provider tuple) in refresh_pr
 SCRUB_PROBE_BYTES = 24     # one per-page verify entry in a scrub batch
 PM_LOCATE_REQ_BYTES = 40   # one relocation-overlay lookup at the manager
 
+# Wire-cost model of the elastic-membership plane (hash-ring join/drain,
+# ``core/membership.py``).  A migration copy pays the full page payload
+# through the ordinary provider put/get path; these constants price only
+# the *control* framing around it — the per-page move command, the
+# per-key metadata handoff, and the ring-membership announcement a
+# join/drain broadcasts — so the rebalance gate (moved bytes vs the
+# theoretical minimum) accounts for real protocol overhead instead of
+# pretending coordination is free.
+MIGRATE_PAGE_CMD_BYTES = 48   # one page/shard move command in a migration batch
+MIGRATE_META_KEY_BYTES = 48   # one DHT key handoff command in an arc transfer
+RING_ANNOUNCE_BYTES = 96      # one join/drain membership announcement
+WIDEN_CMD_BYTES = 48          # one replica-widening command (flash-crowd)
+
 
 @dataclass
 class WireStats:

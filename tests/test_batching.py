@@ -52,10 +52,20 @@ def test_get_many_batches_per_shard():
 
 def test_get_many_fails_over_to_replicas_mid_batch():
     wire = Wire()
-    dht = MetadataDHT(wire, 6, replication=2)
+    # 10 shards, 40 keys: the keys disqualify at most 40 of the 45
+    # shard pairs, so a pair that never co-owns a key always exists
+    dht = MetadataDHT(wire, 10, replication=2)
     items = _fill(dht)
-    wire.set_down("meta-0002", True)
-    wire.set_down("meta-0004", True)
+    # down two shards that never co-own a key, so every key keeps a
+    # live replica (the pair depends on the ring layout, so compute it)
+    import itertools
+    owner_sets = [
+        frozenset(s.shard_id for s in dht._home_shards(k)) for k, _ in items]
+    for a, b in itertools.combinations(dht.shards, 2):
+        if frozenset((a.shard_id, b.shard_id)) not in owner_sets:
+            wire.set_down(a.shard_id, True)
+            wire.set_down(b.shard_id, True)
+            break
     got = dht.get_many([k for k, _ in items])
     assert got == {k: v for k, v in items}
 

@@ -176,7 +176,11 @@ def test_cache_disabled_service_fetches_every_time():
 
 def test_single_flight_dedups_concurrent_readers():
     sim = Simulator(seed=5)
-    svc = BlobSeerService(n_providers=8, n_meta_shards=4, wire=Wire(clock=sim))
+    # pinned to the legacy pool strategy: the test's interleaving (a
+    # reader must arrive while another reader's fetch is in flight)
+    # depends on the page spread this seed produces under round_robin
+    svc = BlobSeerService(n_providers=8, n_meta_shards=4,
+                          wire=Wire(clock=sim), placement="round_robin")
     setup = svc.client("setup")
     bid = setup.create(psize=PSIZE)
     setup.append(bid, b"\xaa" * CHUNK)

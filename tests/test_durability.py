@@ -275,6 +275,63 @@ def test_cold_tier_lifecycle_demotion_and_read_through():
     assert sim.results()["t"] == {"ok": True}
 
 
+def test_cold_pages_promote_back_to_hot_on_repeated_access():
+    """ROADMAP item 1 follow-up: demotion is no longer one-way — a cold
+    page read ``promote_reads`` times since the last lifecycle pass
+    moves back to a hot ring owner, and later passes leave it hot until
+    it ages out again."""
+    sim = Simulator(seed=0)
+    svc = BlobSeerService(n_providers=4, n_meta_shards=2,
+                          wire=Wire(clock=sim), n_cold_providers=2,
+                          page_cache_bytes=0, verify_digests=True)
+
+    def prog():
+        c = svc.client("w")
+        bid = c.create(psize=1024)
+        v = c.append(bid, b"P" * 4096)
+        svc.set_lifecycle(bid, 0.5, promote_reads=3)
+        svc.clock.sleep(1.0)
+        assert lifecycle_round(svc)["demoted"] == 4
+        cold = [p for p in svc.pm.all_providers() if p.tier == "cold"]
+        assert sum(p.page_count() for p in cold) == 4
+
+        # below the threshold: the pass leaves everything cold
+        assert c.read(bid, v, 0, 1024) == b"P" * 1024
+        stats = lifecycle_round(svc)
+        assert stats["promoted"] == 0
+        assert sum(p.page_count() for p in cold) == 4
+
+        # hammer the first page past the threshold: it promotes, alone
+        for _ in range(3):
+            assert c.read(bid, v, 0, 1024) == b"P" * 1024
+        stats = lifecycle_round(svc)
+        assert stats["promoted"] == 1
+        # wire-byte convention, like demoted_bytes: cold read + hot put
+        assert stats["promoted_bytes"] == 2 * 1024
+        assert sum(p.page_count() for p in cold) == 3
+        assert svc.pm.rpc_counters()["promoted_pages"] == 1
+
+        # the promoted copy serves from the hot tier and reads back
+        assert c.read(bid, v, 0, 4096) == b"P" * 4096
+        hot_pages = sum(p.page_count() for p in svc.pm.all_providers()
+                        if p.tier == "hot")
+        assert hot_pages == 1
+        # scrub agrees the post-promotion holders are the real ones
+        assert scrub_round(svc)["damaged_pages"] == 0
+
+        # it ages out again once it goes quiet: promotion is a cycle,
+        # not a one-shot escape from the lifecycle
+        svc.clock.sleep(1.0)
+        assert lifecycle_round(svc)["demoted"] == 1
+        assert sum(p.page_count() for p in cold) == 4
+        assert c.read(bid, v, 0, 4096) == b"P" * 4096
+        return {"ok": True}
+
+    sim.spawn(prog, name="t")
+    sim.run()
+    assert sim.results()["t"] == {"ok": True}
+
+
 def test_cold_providers_excluded_from_placement():
     svc = BlobSeerService(n_providers=2, n_meta_shards=2,
                           n_cold_providers=2)

@@ -1,0 +1,320 @@
+"""Elastic membership at unit scale: join/drain plans, the metadata
+ring's ARES-style reconfiguration, flash-crowd widening, and the two
+bookkeeping planes churn must not strand — the dedup index and GC.
+
+The scenario-level contracts (zero failed ops under a rolling restart,
+near-minimal movement, replayability) live in
+``tests/test_ring_properties.py`` and ``benchmarks/bench_ring.py``;
+these tests pin the mechanisms one layer down.
+"""
+
+import pytest
+
+from repro.core import BlobSeerService, Simulator, Wire
+from repro.core.membership import build_drain_plan, build_join_plan
+
+PS = 4 * 1024
+
+
+def _payload(tag: int, n: int = PS) -> bytes:
+    return bytes([tag % 251 + 1]) * n
+
+
+def _svc(**kw):
+    kw.setdefault("n_providers", 5)
+    kw.setdefault("n_meta_shards", 4)
+    kw.setdefault("data_replication", 2)
+    kw.setdefault("page_cache_bytes", 0)
+    sim = Simulator(seed=11)
+    return sim, BlobSeerService(wire=Wire(clock=sim), **kw)
+
+
+def _holders(svc, lg, provs):
+    overlay = svc.pm.relocated(lg)
+    return tuple(overlay) if overlay else tuple(dict.fromkeys(provs))
+
+
+def _preload(svc, chunks=8):
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    v = 0
+    for k in range(chunks):
+        v = c.append(bid, _payload(k))
+    return c, bid, v
+
+
+# ---------------------------------------------------------------------- join
+
+
+def test_join_plan_is_exactly_the_ring_owed_set():
+    _, svc = _svc()
+    _preload(svc)
+    svc.add_provider("prov-new")
+    plan = build_join_plan(svc, "prov-new")
+    inventory = svc.vm.page_locations()
+    owed = set()
+    for lg, (_b, provs, _n) in inventory.items():
+        width = len(dict.fromkeys(provs))
+        desired = svc.pm.ring_owners(svc.pm.place_key(lg), width)
+        if "prov-new" in desired and "prov-new" not in _holders(
+                svc, lg, provs):
+            owed.add(lg)
+    assert {m.logical for m in plan} == owed
+    # and every move targets the joiner, sourced from a current holder
+    for m in plan:
+        assert m.dst == "prov-new"
+        assert m.src in _holders(svc, m.logical, inventory[m.logical][1])
+
+
+def test_join_lands_owed_pages_and_reads_stay_byte_identical():
+    _, svc = _svc()
+    c, bid, v = _preload(svc)
+    plan = svc.join_provider("prov-new")
+    planned = [m.phys for m in plan]   # run_migration consumes the plan
+    stats = svc.run_migration(plan)
+    assert stats["moves"] == len(planned)
+    listed = {p for p, _at in svc.pm.get("prov-new").list_pages(peer="t")}
+    assert set(planned) <= listed
+    for k in range(8):
+        assert c.read(bid, v, k * PS, PS) == _payload(k)
+    # idempotent: a second plan for the same member owes nothing
+    assert build_join_plan(svc, "prov-new") == []
+
+
+# --------------------------------------------------------------------- drain
+
+
+def test_drain_empties_deregisters_and_keeps_reads_identical():
+    _, svc = _svc()
+    c, bid, v = _preload(svc)
+    victim = next(p.pid for p in svc.pm.all_providers()
+                  if sorted(p.store.iter_pids()))
+    stats = svc.drain_provider(victim)
+    assert stats["moves"] > 0
+    assert victim not in {p.pid for p in svc.pm.all_providers()}
+    for k in range(8):
+        assert c.read(bid, v, k * PS, PS) == _payload(k)
+    # no live page's holder set names the departed member
+    for lg, (_b, provs, _n) in svc.vm.page_locations().items():
+        assert victim not in _holders(svc, lg, provs)
+
+
+def test_drain_below_replication_floor_is_refused():
+    _, svc = _svc(n_providers=2)
+    _preload(svc)
+    with pytest.raises(RuntimeError):
+        svc.drain_provider("prov-0000")
+
+
+def test_drain_moves_erasure_coded_shards_positionally():
+    _, svc = _svc(n_providers=6)
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    svc.set_blob_placement(bid, "ec:2+1")
+    v = 0
+    for k in range(4):
+        v = c.append(bid, _payload(k + 40))
+    victim = next(p.pid for p in svc.pm.all_providers()
+                  if sorted(p.store.iter_pids()))
+    svc.drain_provider(victim)
+    assert victim not in {p.pid for p in svc.pm.all_providers()}
+    for k in range(4):
+        assert c.read(bid, v, k * PS, PS) == _payload(k + 40)
+
+
+def test_draining_member_still_serves_until_its_moves_land():
+    _, svc = _svc()
+    c, bid, v = _preload(svc)
+    victim = next(p.pid for p in svc.pm.all_providers()
+                  if sorted(p.store.iter_pids()))
+    plan = svc.start_drain(victim)
+    assert plan, "drain victim held nothing"
+    # nothing has moved yet: the old owner answers every read
+    for k in range(8):
+        assert c.read(bid, v, k * PS, PS) == _payload(k)
+    svc.run_migration(plan)
+    assert svc.finish_drain(victim) >= 0
+    assert victim not in {p.pid for p in svc.pm.all_providers()}
+
+
+# ---------------------------------------------- dedup index under migration
+
+
+def test_migration_refreshes_dedup_provider_tuples():
+    """Regression: a dedup hit after a drain must hand out descriptors
+    naming the page's *new* holders — before the fix the index kept the
+    frozen put-time tuple, so content written after the drain journaled
+    descriptors pointing at the departed endpoint."""
+    _, svc = _svc(dedup=True, data_replication=1)
+    c = svc.client("w")
+    a = c.create(psize=PS)
+    c.append_many(a, [_payload(7)])   # dedup runs on burst writes
+    (lg, (_b, provs, _n)), = svc.vm.page_locations().items()
+    victim = _holders(svc, lg, provs)[0]
+    svc.drain_provider(victim)
+    new_holders = _holders(svc, lg, svc.vm.page_locations()[lg][1])
+    assert victim not in new_holders
+    # the index entry was refreshed in the same migration round
+    ent = svc.dedup_index._by_digest[svc.dedup_index._by_pid[lg]]
+    assert tuple(ent.providers) == tuple(new_holders)
+    # and a post-drain dedup hit reads back through the live holder
+    b = c.create(psize=PS)
+    vb = c.append_many(b, [_payload(7)])[-1]
+    assert svc.rpc_report()["dedup_hits"] >= 1
+    assert c.read(b, vb, 0, PS) == _payload(7)
+
+
+def test_flash_crowd_widening_refreshes_dedup_tuples():
+    """Same contract on the widening path: the widened copies join the
+    entry's provider tuple so dedup hits spread across them too."""
+    _, svc = _svc(dedup=True, data_replication=1)
+    c = svc.client("w")
+    a = c.create(psize=PS)
+    va = c.append_many(a, [_payload(9)])[-1]
+    for _ in range(40):
+        c.read(a, va, 0, PS)
+    widened = svc.mitigate_flash_crowd(threshold=8, extra=1, blob_id=a)
+    assert widened
+    (lg, holders), = widened
+    assert len(set(holders)) >= 2
+    ent = svc.dedup_index._by_digest[svc.dedup_index._by_pid[lg]]
+    assert tuple(ent.providers) == tuple(holders)
+
+
+# ------------------------------------------------------- GC after departure
+
+
+def test_gc_sweep_completes_after_a_drain_no_failed_deletes():
+    """The journal still names the departed member; ``delete_pages``
+    must skip cleanly-drained endpoints instead of counting them as
+    failed deletes forever."""
+    _, svc = _svc()
+    c, bid, _v = _preload(svc)
+    for k in range(3):     # dead pages for the sweep to reclaim
+        c.write(bid, _payload(k + 60), 0)
+    victim = next(p.pid for p in svc.pm.all_providers()
+                  if sorted(p.store.iter_pids()))
+    svc.drain_provider(victim)
+    c.set_retention(bid, keep_last=1)
+    from repro.core.gc import collect_garbage
+    stats = collect_garbage(svc, client="gc-t", orphan_grace=None)
+    assert stats["failed_deletes"] == 0
+    assert stats["swept_pages"] > 0
+    # second round: nothing left pending on the departed endpoint
+    again = collect_garbage(svc, client="gc-t", orphan_grace=None)
+    assert again["failed_deletes"] == 0
+
+
+# ------------------------------------------------------- flash-crowd widen
+
+
+def test_widened_copy_serves_reads_when_the_hot_holder_dies():
+    _, svc = _svc(data_replication=1)
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    v = c.append(bid, _payload(3))
+    for _ in range(40):
+        c.read(bid, v, 0, PS)
+    widened = svc.mitigate_flash_crowd(threshold=8, extra=1, blob_id=bid)
+    assert widened, "hot page was not widened"
+    (lg, holders), = widened
+    assert len(set(holders)) >= 2
+    # kill the original holder: the widened copy must carry the crowd
+    original = _holders(svc, lg, svc.vm.page_locations()[lg][1])[0]
+    survivors = [h for h in holders if h != original]
+    assert survivors
+    svc.kill_provider(original)
+    assert c.read(bid, v, 0, PS) == _payload(3)
+
+
+def test_mitigation_is_a_noop_below_threshold():
+    _, svc = _svc()
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    v = c.append(bid, _payload(5))
+    c.read(bid, v, 0, PS)
+    assert svc.mitigate_flash_crowd(threshold=8, blob_id=bid) == []
+    assert svc.pm.rpc_counters()["widened_pages"] == 0
+
+
+# -------------------------------------------------------- metadata ring
+
+
+def _key_placement(dht):
+    placed = {}
+    for s in dht.shards:
+        for k in s.keys():
+            placed.setdefault(k, set()).add(s.shard_id)
+    return placed
+
+
+def test_meta_join_rebalances_keys_onto_ring_owners():
+    _, svc = _svc()
+    _preload(svc)
+    before_total = sum(len(s.keys()) for s in svc.dht.shards)
+    svc.add_meta_shard("meta-new")
+    assert not svc.dht.reconfiguring
+    assert sum(len(s.keys()) for s in svc.dht.shards) == before_total
+    for k, holders in _key_placement(svc.dht).items():
+        want = {s.shard_id for s in svc.dht._home_shards(k)}
+        assert holders == want, k
+    assert "meta-new" in {s.shard_id for s in svc.dht.shards}
+
+
+def test_meta_drain_removes_the_shard_and_preserves_every_key():
+    _, svc = _svc()
+    c, bid, v = _preload(svc)
+    before_total = sum(len(s.keys()) for s in svc.dht.shards)
+    svc.drain_meta_shard("meta-0001")
+    assert "meta-0001" not in {s.shard_id for s in svc.dht.shards}
+    assert sum(len(s.keys()) for s in svc.dht.shards) == before_total
+    for k, holders in _key_placement(svc.dht).items():
+        want = {s.shard_id for s in svc.dht._home_shards(k)}
+        assert holders == want, k
+    # the control plane still answers: reads traverse the moved tree
+    for k in range(8):
+        assert c.read(bid, v, k * PS, PS) == _payload(k)
+
+
+def test_meta_puts_and_gets_stay_safe_mid_reconfiguration():
+    _, svc = _svc()
+    c, bid, v = _preload(svc)
+    svc.dht.begin_join("meta-mid")
+    assert svc.dht.reconfiguring
+    # one budget-capped round, then live traffic against half-moved arcs
+    svc.dht.migration_round(2048)
+    assert c.read(bid, v, 0, PS) == _payload(0)
+    v2 = c.append(bid, _payload(77))
+    assert c.read(bid, v2, 8 * PS, PS) == _payload(77)
+    while not svc.dht.migration_round(1 << 20)["done"]:
+        pass
+    assert not svc.dht.reconfiguring
+    assert c.read(bid, v2, 8 * PS, PS) == _payload(77)
+    for k, holders in _key_placement(svc.dht).items():
+        want = {s.shard_id for s in svc.dht._home_shards(k)}
+        assert holders == want, k
+
+
+def test_meta_join_rejects_overlapping_reconfigurations():
+    _, svc = _svc()
+    svc.dht.begin_join("meta-a")
+    with pytest.raises(RuntimeError):
+        svc.dht.begin_join("meta-b")
+    with pytest.raises(RuntimeError):
+        svc.dht.begin_drain("meta-0000")
+    while not svc.dht.migration_round(1 << 20)["done"]:
+        pass
+    with pytest.raises(ValueError):
+        svc.dht.begin_join("meta-a")   # already a member
+
+
+def test_drain_plan_skips_pages_not_in_the_live_inventory():
+    _, svc = _svc()
+    _preload(svc)
+    victim = next(p.pid for p in svc.pm.all_providers()
+                  if sorted(p.store.iter_pids()))
+    # plant a garbage page the journal never saw
+    svc.pm.get(victim).put_pages([("pg-ghost", b"\xff" * 16)], peer="t")
+    svc.pm.mark_draining(victim)
+    plan = build_drain_plan(svc, victim)
+    assert all(m.phys != "pg-ghost" for m in plan)

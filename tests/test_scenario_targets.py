@@ -27,6 +27,10 @@ PS = 4 * 1024
     ("corrupt:prov-0001", ("corrupt", "prov-0001")),
     ("prov-0002", ("kill", "prov-0002")),
     ("meta-0000", ("kill", "meta-0000")),
+    ("join:prov-0005", ("join", "prov-0005")),
+    ("drain:prov-0001", ("drain", "prov-0001")),
+    ("flashcrowd:0", ("flashcrowd", 0)),
+    ("flashcrowd:2", ("flashcrowd", 2)),
 ])
 def test_parse_accepts_well_formed_specs(spec, expected):
     assert parse_failure_target(spec) == expected
@@ -39,6 +43,12 @@ def test_parse_accepts_well_formed_specs(spec, expected):
     ("vm-leader:1.5", "integer"),
     ("vm-leader:-1", ">= 0"),
     ("corrupt:", "no provider"),
+    ("join:", "no provider"),
+    ("drain:", "no provider"),
+    ("flashcrowd:", "integer"),
+    ("flashcrowd:x", "integer"),
+    ("flashcrowd:1.5", "integer"),
+    ("flashcrowd:-1", ">= 0"),
 ])
 def test_parse_rejects_malformed_specs(spec, msg):
     with pytest.raises(ValueError, match=msg):
@@ -100,6 +110,65 @@ def test_apply_vm_leader_kills_the_lineage_leader():
     assert killed == f"vm-{state['blobs'][1]}"
     assert svc.wire.is_down(killed)
     assert not svc.wire.is_down(f"vm-{state['blobs'][0]}")
+
+
+def test_apply_join_registers_the_provider_and_streams_owed_pages():
+    sim, svc = _deployment(data_replication=2)
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    v = 0
+    for k in range(6):
+        v = c.append(bid, bytes([k + 1]) * PS)
+    assert apply_failure_target(svc, {}, "join:prov-extra") \
+        == "join:prov-extra"
+    assert "prov-extra" in {p.pid for p in svc.pm.all_providers()}
+    # owed pages actually landed — the new member serves inventory
+    assert sorted(svc.pm.get("prov-extra").list_pages(peer="t"))
+    for k in range(6):
+        assert c.read(bid, v, k * PS, PS) == bytes([k + 1]) * PS
+
+
+def test_apply_drain_empties_and_deregisters_the_provider():
+    sim, svc = _deployment(data_replication=2)
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    v = 0
+    for k in range(6):
+        v = c.append(bid, bytes([k + 11]) * PS)
+    victim = next(p.pid for p in svc.pm.all_providers()
+                  if sorted(p.store.iter_pids()))
+    assert apply_failure_target(svc, {}, f"drain:{victim}") \
+        == f"drain:{victim}"
+    assert victim not in {p.pid for p in svc.pm.all_providers()}
+    for k in range(6):
+        assert c.read(bid, v, k * PS, PS) == bytes([k + 11]) * PS
+
+
+def test_apply_flashcrowd_widens_the_hot_pages():
+    # distinct crowd nodes share no cache: every read hits a provider
+    _, svc = _deployment(page_cache_bytes=0)
+    c = svc.client("w")
+    bid = c.create(psize=PS)
+    v = c.append(bid, b"\x55" * PS)
+    for _ in range(40):
+        assert c.read(bid, v, 0, PS) == b"\x55" * PS
+    state = {"blobs": [bid], "flashcrowd_threshold": 8,
+             "flashcrowd_extra": 1}
+    before = svc.pm.rpc_counters()["widened_pages"]
+    assert apply_failure_target(svc, state, "flashcrowd:0") \
+        == "flashcrowd:0"
+    assert svc.pm.rpc_counters()["widened_pages"] > before
+    assert c.read(bid, v, 0, PS) == b"\x55" * PS
+
+
+def test_apply_flashcrowd_requires_setup_blobs_in_state():
+    _, svc = _deployment()
+    with pytest.raises(ValueError, match="env.state"):
+        apply_failure_target(svc, {}, "flashcrowd:0")
+    c = svc.client("w")
+    state = {"blobs": [c.create(psize=PS)]}
+    with pytest.raises(ValueError, match="out of range"):
+        apply_failure_target(svc, state, "flashcrowd:1")
 
 
 def test_apply_vm_leader_requires_setup_blobs_in_state():

@@ -34,6 +34,7 @@ SNIPPET_FILES = [
     "docs/checkpoint.md",
     "docs/durability.md",
     "docs/watch.md",
+    "docs/membership.md",
 ]
 
 _FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
